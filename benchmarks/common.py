@@ -1,0 +1,16 @@
+"""Shared benchmark utilities. Every table prints `name,us_per_call,derived`
+CSV rows (us_per_call = wall-time of the measured operation where one exists,
+0 for purely analytic rows; derived = the table's headline quantity)."""
+import time
+
+
+def row(name: str, us_per_call: float, derived) -> None:
+    print(f"{name},{us_per_call:.3f},{derived}")
+
+
+def timeit(fn, *args, repeat: int = 5, **kw) -> float:
+    fn(*args, **kw)  # warmup
+    t0 = time.perf_counter()
+    for _ in range(repeat):
+        fn(*args, **kw)
+    return (time.perf_counter() - t0) / repeat * 1e6

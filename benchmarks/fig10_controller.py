@@ -1,0 +1,43 @@
+"""Paper Fig. 10: state-controller scalability — heartbeat processing CPU
+time and connection building measured on OUR controller at up to 32 768
+workers (the paper's stress test, reproduced for real)."""
+import numpy as np
+
+from benchmarks.common import row, timeit
+from repro.core.controller import HeartbeatTable, StateController
+
+
+def run() -> None:
+    for n in (1024, 8192, 32768):
+        hb = HeartbeatTable(n)
+        workers = np.arange(n)
+        us_beat = timeit(hb.beat_many, workers, 100.0, repeat=10)
+        us_scan = timeit(hb.failed, 101.5, repeat=10)
+        row(f"fig10/{n}workers/heartbeat_batch_us", us_beat,
+            f"{us_beat / n * 1000:.1f}ns_per_worker")
+        row(f"fig10/{n}workers/failure_scan_us", us_scan, "")
+    # connection building: lock-free address array at 32k
+    from repro.core.lccl import LockFreeAddressArray
+    def connect(n=32768):
+        arr = LockFreeAddressArray(n)
+        for r in range(n):
+            arr.publish(r, r)
+        for r in range(n):
+            arr.connect_all(r, [(r + 1) % n, (r - 1) % n])
+    us = timeit(connect, repeat=1)
+    row("fig10/32768workers/connection_build_us", us, f"{us / 1e6:.2f}s")
+
+    # end-to-end detection latency via the controller
+    ctl = StateController(dp=64, pp=2, tp=4, global_batch=256)
+    for w in range(ctl.n_workers):
+        ctl.beat(w, now=100.0)
+    ctl.beat(7, now=100.0)  # worker 7 then goes silent
+    for w in range(ctl.n_workers):
+        if w != 7:
+            ctl.beat(w, now=101.6)
+    failed = ctl.detect_failures(now=101.6)
+    row("fig10/detection/identified", 0.0, str(failed == [7]))
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,74 @@
+"""Paper Fig. 4: per-iteration checkpoint overhead by engine.
+
+Two parts:
+  (a) REAL measurement: per-step wall time of a smoke-scale training loop in
+      the cluster simulator with instant checkpointing ON vs OFF (the razor +
+      ring-copy overhead FFTrainer adds to each iteration).
+  (b) Engine model at paper scale: overhead per iteration for vanilla
+      Megatron/DeepSpeed (full CKPT over storage), Gemini (CPU-memory, every
+      minute), FFTrainer (razor + idle links) using the paper's bandwidths.
+"""
+import dataclasses
+from pathlib import Path
+
+from benchmarks.common import row, timeit
+from repro.configs import get_arch, reduce_for_smoke
+from repro.core.analytic import ckpt_time_full, ckpt_time_razor
+from repro.models import param_count
+
+
+def _measured(tmp: Path) -> None:
+    from repro.runtime.cluster import SimCluster
+    cfg = dataclasses.replace(reduce_for_smoke(get_arch("qwen3-0.6b")),
+                              dtype="float32")
+    base, inst = [], []
+    for with_ckpt in (False, True):
+        clu = SimCluster(cfg, dp=4, global_batch=8, seq_len=16,
+                         ckpt_dir=tmp / f"c{with_ckpt}", full_every=10**9)
+        if not with_ckpt:
+            clu._shard_and_backup = lambda: None  # disable instant ckpt
+        clu.run(3)  # warmup + compile
+        import time
+        t0 = time.perf_counter()
+        clu.run(5)
+        dt = (time.perf_counter() - t0) / 5 * 1e6
+        (inst if with_ckpt else base).append(dt)
+    row("fig4/measured/per_iter_no_ckpt_us", base[0], "")
+    row("fig4/measured/per_iter_instant_ckpt_us", inst[0], "")
+    row("fig4/measured/overhead_frac", 0.0,
+        f"{(inst[0] - base[0]) / base[0]:.4f}")
+
+
+def _modeled() -> None:
+    # paper measurement: async CKPT in a background thread inflates the
+    # iteration ~7x while I/O is active (GPU-host PCIe contention, (3.1)) —
+    # the dominant term, calibrated as CONTENTION
+    disk, nic, CONTENTION = 2e9, 25e9, 7.0
+    per_iter = {"gpt2-2.7b": 21.0, "llama3-8b": 11.0,
+                "llama2-13b": 36.0, "llama3-70b": 77.0}
+    dps = {"gpt2-2.7b": 16, "llama3-8b": 4, "llama2-13b": 4, "llama3-70b": 2}
+    pts = {"gpt2-2.7b": 8, "llama3-8b": 32, "llama2-13b": 32,
+           "llama3-70b": 64}
+    for arch, t_iter in per_iter.items():
+        phi = param_count(get_arch(arch)) / pts[arch]  # params per GPU
+        t_full = ckpt_time_full(phi, nic, disk)        # megatron-style
+        # contention-inflated overhead amortized over the 5-iteration period
+        over = (t_full * (CONTENTION - 1)) / (5 * t_iter)
+        row(f"fig4/model/{arch}/megatron_overhead", 0.0, f"{over:.3f}")
+        # gemini: CPU-memory ckpt each minute, mild contention
+        t_gem = 2 * 16 * phi / 20e9                    # host copy at 20 GB/s
+        row(f"fig4/model/{arch}/gemini_overhead", 0.0,
+            f"{t_gem * 0.5 / 60.0:.3f}")
+        # fftrainer: razor shard rides idle links; hidden iff FCR >= 1
+        t_razor = ckpt_time_razor(phi / dps[arch], nic)
+        row(f"fig4/model/{arch}/fftrainer_overhead", 0.0,
+            f"{max(t_razor - t_iter, 0.0) / t_iter + 0.01:.3f}")
+
+
+def run(tmp: Path = Path("/tmp/repro_bench_fig4")) -> None:
+    _measured(tmp)
+    _modeled()
+
+
+if __name__ == "__main__":
+    run()

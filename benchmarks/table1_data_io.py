@@ -1,0 +1,42 @@
+"""Paper Table 1: per-iteration data input vs. output and training-network
+utilization — the observation (links idle >97% of the time) that motivates
+using the training network for STATE traffic.
+
+Derived analytically from our model configs on the paper's testbed params
+(8 workers/host, 200 Gb/s NIC) and on the TPU target (v5e ICI)."""
+from benchmarks.common import row
+from repro.configs import get_arch
+from repro.models import param_count
+from repro.roofline import hw
+
+# paper's testbed: per-iteration wall time + (d,p,t) from Tables 1/4
+PAPER = {  # arch: (iter_s, dp, pp, tp)
+    "gpt2-2.7b": (21.0, 16, 2, 4),
+    "llama3-8b": (11.0, 4, 8, 4),
+    "llama2-13b": (36.0, 4, 8, 4),
+    "llama3-70b": (77.0, 2, 8, 8),
+}
+NIC = 200e9 / 8            # 200 Gb/s -> bytes/s
+SEQ, BATCH_PER_GPU = 4096, 1
+GPUS = 8                   # GPUs sharing one NIC
+
+
+def run() -> None:
+    for arch, (t_iter, d, pp, tp) in PAPER.items():
+        cfg = get_arch(arch)
+        phi = param_count(cfg)
+        nic_capacity_gb = NIC * t_iter / 1e9
+        data_in_kb = GPUS * BATCH_PER_GPU * SEQ * 4 / 1024  # token ids
+        # per-NIC output per iteration: ring-allreduce of each GPU's model
+        # partition (phi / (t p)) in fp16, 2x traffic, 8 GPUs per NIC
+        per_gpu = phi / (pp * tp)
+        data_out_gb = GPUS * 2 * per_gpu * 2 / 1e9
+        util = data_out_gb / max(nic_capacity_gb, 1e-9)
+        row(f"table1/{arch}/nic_capacity_gb", 0.0, f"{nic_capacity_gb:.0f}")
+        row(f"table1/{arch}/data_in_kb", 0.0, f"{data_in_kb:.0f}")
+        row(f"table1/{arch}/data_out_gb", 0.0, f"{data_out_gb:.1f}")
+        row(f"table1/{arch}/link_utilization", 0.0, f"{util:.3f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,19 @@
+"""Paper Table 2: cluster failure probability P_x at a given MTBF horizon and
+the relative MFU loss (per-30-min CKPT, MTTR 1000 s)."""
+from benchmarks.common import row
+from repro.core.analytic import cluster_failure_probability, mfu_loss
+
+
+def run() -> None:
+    for mtbf_h in (3, 6, 9, 12):
+        p16k = cluster_failure_probability(16384, mtbf_h)
+        p65k = cluster_failure_probability(65536, mtbf_h)
+        loss = mfu_loss(t_ckpt=0.0, t_interval=1800.0, mttr=1000.0,
+                        mtbf=mtbf_h * 3600.0)
+        row(f"table2/mtbf{mtbf_h}h/P_16384", 0.0, f"{p16k:.2f}")
+        row(f"table2/mtbf{mtbf_h}h/P_65536", 0.0, f"{p65k:.2f}")
+        row(f"table2/mtbf{mtbf_h}h/rel_mfu_loss", 0.0, f"{loss.total:.2f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,19 @@
+"""Paper Table 6: probability that failures are recoverable from CKPTs in
+main memory — FFTrainer (Eq. 5) vs Gemini (m=2 replicas, Monte Carlo)."""
+from benchmarks.common import row, timeit
+from repro.core.analytic import (gemini_recovery_probability,
+                                 recovery_probability)
+
+
+def run() -> None:
+    for hosts in (800, 1200, 1600, 2000):
+        for h in (3, 12):
+            us = timeit(recovery_probability, hosts, h, repeat=3)
+            p = recovery_probability(hosts, h)
+            row(f"table6/{hosts}hosts/H{h}/fftrainer", us, f"{p:.4f}")
+            g = gemini_recovery_probability(hosts, h, m=2, samples=50_000)
+            row(f"table6/{hosts}hosts/H{h}/gemini_m2", 0.0, f"{g:.4f}")
+
+
+if __name__ == "__main__":
+    run()

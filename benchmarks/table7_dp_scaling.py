@@ -1,0 +1,42 @@
+"""Paper Table 7: CKPT-engine cost vs data-parallel degree (GPT-2 2.7B).
+Measured on the cluster simulator: per-iteration time with instant
+checkpointing on/off at dp = 2,4,8 (fixed per-worker batch, like the paper),
+plus the razor's unique-bytes scaling (the mechanism behind the flat cost)."""
+import dataclasses
+import time
+from pathlib import Path
+
+from benchmarks.common import row
+from repro.configs import get_arch, reduce_for_smoke
+from repro.core.razor import razor_bytes_formula
+from repro.models import param_count
+from repro.runtime.cluster import SimCluster
+
+
+def run(tmp: Path = Path("/tmp/repro_bench_t7")) -> None:
+    cfg = dataclasses.replace(reduce_for_smoke(get_arch("gpt2-2.7b")),
+                              dtype="float32")
+    for dp in (2, 4, 8):
+        times = {}
+        for with_ckpt in (False, True):
+            clu = SimCluster(cfg, dp=dp, global_batch=2 * dp, seq_len=16,
+                             ckpt_dir=tmp / f"dp{dp}_{with_ckpt}",
+                             full_every=10**9)
+            if not with_ckpt:
+                clu._shard_and_backup = lambda: None
+            clu.run(2)
+            t0 = time.perf_counter()
+            clu.run(5)
+            times[with_ckpt] = (time.perf_counter() - t0) / 5
+        slowdown = times[True] / times[False] - 1.0
+        row(f"table7/dp{dp}/fftrainer_slowdown", times[True] * 1e6,
+            f"{max(slowdown, 0.0):.4f}")
+    # razor scaling at paper scale
+    phi = param_count(get_arch("gpt2-2.7b"))
+    for dp in (2, 4, 8, 16):
+        row(f"table7/dp{dp}/razor_unique_gb", 0.0,
+            f"{razor_bytes_formula(phi, dp) / 1e9:.2f}")
+
+
+if __name__ == "__main__":
+    run()

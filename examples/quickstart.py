@@ -1,0 +1,35 @@
+"""Quickstart: train a smoke-scale model for a few steps with FFTrainer's
+instant checkpointing, then kill a worker and recover with zero rollback.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import dataclasses
+from pathlib import Path
+
+from repro.configs import get_arch, reduce_for_smoke
+from repro.optim import AdamWConfig
+from repro.runtime.cluster import SimCluster
+
+cfg = dataclasses.replace(reduce_for_smoke(get_arch("qwen3-0.6b")),
+                          dtype="float32")
+cluster = SimCluster(cfg, dp=4, global_batch=8, seq_len=16,
+                     ckpt_dir=Path("/tmp/quickstart_ckpt"),
+                     hp=AdamWConfig(lr=1e-3, warmup_steps=2, total_steps=50))
+
+print("training 5 steps...")
+for loss in cluster.run(5):
+    print(f"  loss {loss:.4f}")
+
+print("\nkilling worker 2 (its ZeRO shard lives on in worker 3's RAM)...")
+cluster.inject_failure([2])
+report = cluster.recover()
+print(f"recovered from {report.recovered_from}; "
+      f"rollback = {report.rolled_back_iterations} iterations; "
+      f"modeled wall time = {report.total_time:.1f}s "
+      f"(vs ~900s for a serial baseline)")
+
+print("\ncontinuing training...")
+for loss in cluster.run(5):
+    print(f"  loss {loss:.4f}")
+print("\ndone — instant checkpoints taken:",
+      cluster.workers[0].engine.instant_count)

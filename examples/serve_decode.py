@@ -1,0 +1,39 @@
+"""Serve a small model with batched requests: prefill + KV-cache greedy
+decode, including a Mamba2 (attention-free) model whose decode state is O(1).
+
+    PYTHONPATH=src python examples/serve_decode.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_arch, reduce_for_smoke
+from repro.models import build_model
+
+for arch in ("qwen3-0.6b", "mamba2-2.7b"):
+    cfg = reduce_for_smoke(get_arch(arch))
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    rng = np.random.default_rng(0)
+    b, prompt, gen = 4, 12, 12
+
+    batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab_size,
+                                                (b, prompt)), jnp.int32),
+             "max_len": prompt + gen}
+    logits, cache = model.prefill(params, batch)
+    decode = jax.jit(model.decode_step)
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    toks = [tok]
+    t0 = time.time()
+    for _ in range(gen - 1):
+        logits, cache = decode(params, cache, tok)
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        toks.append(tok)
+    jax.block_until_ready(tok)
+    out = np.stack([np.asarray(t) for t in toks], 1)
+    state_kind = "KV cache" if "k" in cache else "SSM state (O(1) in seq!)"
+    print(f"{arch}: generated {out.shape} tokens in {time.time()-t0:.2f}s "
+          f"via {state_kind}")
+    print("  seq0:", out[0].tolist())

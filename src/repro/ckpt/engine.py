@@ -1,0 +1,98 @@
+"""FFTrainer checkpoint engine (paper §4.2): instant neighbor checkpoints +
+periodic full async fallback (multi-level insurance).
+
+Host-side view of the in-step collective-permute: after each step the runtime
+hands the engine the `backup` pytree (this worker's RAM now holds its DP
+*predecessor's* unique shard). The engine keeps the last two versions for
+consistency (§4.2) and owns the every-N full async disk checkpoint."""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.ckpt.storage import AsyncWriter, load_meta, load_pytree, save_pytree
+from repro.core.consistency import SnapshotKeeper
+
+PyTree = Any
+
+
+@dataclass
+class CkptEngineConfig:
+    out_dir: Path = Path("checkpoints")
+    full_every: int = 500          # multi-level insurance period
+    snapshot_depth: int = 2
+
+
+class CkptEngine:
+    def __init__(self, cfg: CkptEngineConfig, worker_id: int = 0):
+        self.cfg = cfg
+        self.worker_id = worker_id
+        # neighbor redundancy: predecessor's unique shard, two versions
+        self.neighbor = SnapshotKeeper(cfg.snapshot_depth)
+        # own unique shard (for lazy backup and version rollback)
+        self.own = SnapshotKeeper(cfg.snapshot_depth)
+        self.writer = AsyncWriter()
+        self.instant_count = 0
+        self.full_count = 0
+
+    # ---------------- instant (per-iteration) path ---------------- #
+    def on_step(self, iteration: int, own_unique: PyTree,
+                neighbor_backup: Optional[PyTree]) -> None:
+        """Called each iteration with this worker's unique shard and the
+        permuted shard received from the DP-ring predecessor."""
+        self.own.push(iteration, own_unique)
+        if neighbor_backup is not None:
+            self.neighbor.push(iteration, neighbor_backup)
+            self.instant_count += 1
+
+    def newest_version(self) -> int:
+        return self.own.latest().iteration if self.own.latest() else -1
+
+    # ---------------- full async fallback ---------------- #
+    def maybe_full_checkpoint(self, iteration: int, full_state: PyTree,
+                              *, force: bool = False) -> bool:
+        if not force and (iteration == 0 or
+                          iteration % self.cfg.full_every != 0):
+            return False
+        path = self._full_path(iteration)
+        ok = self.writer.submit(path, full_state,
+                                {"iteration": iteration,
+                                 "worker": self.worker_id})
+        if ok:
+            self.full_count += 1
+        return ok
+
+    def _full_path(self, iteration: int) -> Path:
+        return (Path(self.cfg.out_dir) /
+                f"full_it{iteration:08d}_w{self.worker_id:05d}.npz")
+
+    def latest_full(self) -> Optional[int]:
+        root = Path(self.cfg.out_dir)
+        if not root.exists():
+            return None
+        its = sorted({int(p.name.split("_")[1][2:])
+                      for p in root.glob(f"full_it*_w{self.worker_id:05d}.npz")})
+        return its[-1] if its else None
+
+    def restore_full(self, iteration: int, like: PyTree) -> PyTree:
+        return load_pytree(self._full_path(iteration), like)
+
+    # ---------------- lazy backup (paper §4.2) ---------------- #
+    def lazy_backup(self, iteration: int, redundant_state: PyTree,
+                    *, is_dp_rank0: bool) -> Optional[Path]:
+        """At recovery time only, DP rank 0 persists the razor-redundant
+        state (params) so newcomers can fetch it; others skip (dedupe)."""
+        if not is_dp_rank0:
+            return None
+        path = (Path(self.cfg.out_dir) /
+                f"lazy_it{iteration:08d}_w{self.worker_id:05d}.npz")
+        save_pytree(path, redundant_state, {"iteration": iteration})
+        return path
+
+    def close(self) -> None:
+        self.writer.close()

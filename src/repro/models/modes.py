@@ -1,0 +1,99 @@
+"""Analysis mode: cost-exact graph variants for the roofline dry-run.
+
+XLA's HLO cost analysis counts a while-loop body ONCE (not x trip count), so a
+production graph built with ``lax.scan`` under-reports FLOPs/bytes/collective
+traffic. For the roofline measurement we re-lower the same math with:
+
+  * layer stacks unrolled (Python loop over layers),
+  * blockwise attention replaced by the dense masked form (identical FLOPs;
+    score-materialization bytes are corrected analytically in the analyzer),
+  * chunked SSD replaced by the parallel form (vmapped intra-chunk quadratic +
+    associative-scan over chunk states — no sequential while at all).
+
+Production compiles (memory proof, collective schedule) never use this mode.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+
+_ANALYSIS = contextvars.ContextVar("repro_analysis_mode", default=False)
+_FSDP_UNSHARD = contextvars.ContextVar("repro_fsdp_unshard", default=False)
+
+
+@contextlib.contextmanager
+def analysis_mode(on: bool = True):
+    tok = _ANALYSIS.set(on)
+    try:
+        yield
+    finally:
+        _ANALYSIS.reset(tok)
+
+
+def in_analysis_mode() -> bool:
+    return _ANALYSIS.get()
+
+
+@contextlib.contextmanager
+def fsdp_unshard(on: bool = True):
+    """With FSDP param storage, layer bodies re-constrain their param slice
+    to the TP-only spec INSIDE the scan body, so the "data"-axis all-gather
+    is loop-variant and cannot be hoisted out of the loop (the whole-stack
+    gather otherwise materializes every layer's weights at once)."""
+    tok = _FSDP_UNSHARD.set(on)
+    try:
+        yield
+    finally:
+        _FSDP_UNSHARD.reset(tok)
+
+
+def unshard_layer_params(p: Any, cfg) -> Any:
+    """Applied at the top of every layer body (no-op unless fsdp_unshard)."""
+    if not _FSDP_UNSHARD.get():
+        return p
+    import jax
+    from jax.sharding import PartitionSpec as P
+
+    from repro.parallel.constraints import _mesh_shape
+    from repro.parallel.sharding import _leaf_spec
+
+    mesh = _mesh_shape()
+    tp = mesh.get("model", 1)
+    if not mesh or "data" not in mesh:
+        return p
+
+    def rule(path, leaf):
+        keys = [getattr(k, "key", getattr(k, "name", None)) for k in path]
+        spec = _leaf_spec(keys[-1], leaf.shape, cfg, tp, stacked=False)
+        try:
+            return jax.lax.with_sharding_constraint(leaf, spec)
+        except Exception:
+            return leaf
+
+    return jax.tree_util.tree_map_with_path(rule, p)
+
+
+def scan_layers(body: Callable, carry: Any, xs: Any,
+                length: Optional[int] = None) -> Tuple[Any, Any]:
+    """``lax.scan`` in production; unrolled Python loop in analysis mode.
+
+    body(carry, x) -> (carry, y). Returns (carry, ys) with ys stacked (or None
+    if every y is None).
+    """
+    if not in_analysis_mode():
+        return jax.lax.scan(body, carry, xs)
+    if length is None:
+        length = jax.tree.leaves(xs)[0].shape[0]
+    ys = []
+    for i in range(length):
+        x_i = jax.tree.map(lambda a: a[i], xs)
+        carry, y = body(carry, x_i)
+        ys.append(y)
+    if all(y is None for y in ys):
+        return carry, None
+    import jax.numpy as jnp
+    stacked = jax.tree.map(lambda *zs: jnp.stack(zs), *ys)
+    return carry, stacked

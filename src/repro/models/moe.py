@@ -1,0 +1,145 @@
+"""Mixture-of-Experts: top-k router with capacity-bounded index dispatch.
+
+TPU-native adaptation: instead of GShard's dense one-hot dispatch einsum (O(T·E·C)
+memory) we build (E, C) token-index tables with scatter, gather tokens into an
+(E, C, D) buffer (sharded expert-parallel over the ``model`` axis), run the expert
+matmuls as one batched einsum on the MXU, and combine with a weighted gather.
+Tokens over capacity are dropped (GShard semantics, capacity_factor default 1.25).
+
+Padded experts (e.g. Qwen2-MoE's 60 -> 64 for EP-16) get -inf router logits and
+receive only padding slots.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.parallel.constraints import BATCH, constrain
+
+
+def moe_capacity(num_tokens: int, num_experts: int, top_k: int,
+                 capacity_factor: float) -> int:
+    cap = int(np.ceil(top_k * num_tokens * capacity_factor / num_experts))
+    return max(8, ((cap + 7) // 8) * 8)  # pad to 8 for TPU lane alignment
+
+
+def moe_init(key, cfg, dtype) -> Dict:
+    e = cfg.padded_experts
+    d, f = cfg.d_model, cfg.moe_d_ff
+    ks = jax.random.split(key, 6)
+    sc, so = 1.0 / np.sqrt(d), 1.0 / np.sqrt(f)
+    p = {
+        "router": (jax.random.normal(ks[0], (d, e)) * sc).astype(jnp.float32),
+        "w_gate": (jax.random.normal(ks[1], (e, d, f)) * sc).astype(dtype),
+        "w_up": (jax.random.normal(ks[2], (e, d, f)) * sc).astype(dtype),
+        "w_down": (jax.random.normal(ks[3], (e, f, d)) * so).astype(dtype),
+    }
+    if cfg.num_shared_experts:
+        fs = cfg.shared_expert_d_ff
+        p["shared"] = {
+            "w_gate": (jax.random.normal(ks[4], (d, fs)) * sc).astype(dtype),
+            "w_up": (jax.random.normal(ks[5], (d, fs)) * sc).astype(dtype),
+            "w_down": (jax.random.normal(
+                jax.random.fold_in(ks[5], 1), (fs, d)) / np.sqrt(fs)).astype(dtype),
+        }
+        p["shared_gate"] = jnp.zeros((d,), jnp.float32)
+    return p
+
+
+def moe_groups(num_tokens: int) -> int:
+    """Dispatch groups (GShard-style). Groups map onto the data axis so the
+    position sort/scatter/gather stay SHARD-LOCAL — a global argsort over the
+    data axis cost ~29 s/step of collectives at qwen3-moe train_4k scale."""
+    for g in (16, 8, 4, 2):
+        if num_tokens % g == 0 and num_tokens // g >= 8:
+            return g
+    return 1
+
+
+def moe_apply(p: Dict, cfg, x: jax.Array):
+    """x: (B, S, D) -> (out: (B, S, D), aux_loss: scalar).
+
+    Grouped capacity dispatch: tokens are split into G groups aligned with
+    the data axis; routing positions, the (G, E, C) index table, and the
+    combine-gather are all group-local. Only the expert einsum crosses the
+    mesh (token <-> expert all-to-all, EP over "model").
+    """
+    b, s, d = x.shape
+    t = b * s
+    e = cfg.padded_experts
+    k = cfg.top_k
+    grp = moe_groups(t)
+    tg = t // grp
+    cap = moe_capacity(tg, e, k, cfg.capacity_factor)
+    xf = constrain(x.reshape(grp, tg, d), BATCH, None, None)
+
+    # --- routing (fp32) ---
+    logits = xf.astype(jnp.float32) @ p["router"]  # (G, Tg, E)
+    if e != cfg.num_experts:  # mask padded experts
+        pad_mask = jnp.arange(e) >= cfg.num_experts
+        logits = jnp.where(pad_mask[None, None, :], -1e30, logits)
+    gate_probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_e = jax.lax.top_k(gate_probs, k)  # (G, Tg, k)
+    top_w = top_w / jnp.maximum(jnp.sum(top_w, -1, keepdims=True), 1e-9)
+
+    # Switch-style load-balance aux (reuses this router pass)
+    hard = jnp.argmax(gate_probs, -1).reshape(-1)
+    frac = jnp.zeros((e,), jnp.float32).at[hard].add(1.0) / t
+    aux = cfg.num_experts * jnp.sum(
+        frac * jnp.mean(gate_probs.reshape(t, e), axis=0))
+
+    # --- group-local capacity positions via stable sort ---
+    flat_e = top_e.reshape(grp, tg * k)
+    order = jnp.argsort(flat_e, axis=1, stable=True)
+    sorted_e = jnp.take_along_axis(flat_e, order, axis=1)
+    first = jax.vmap(lambda se: jnp.searchsorted(se, jnp.arange(e)))(sorted_e)
+    pos_sorted = jnp.arange(tg * k)[None, :] - \
+        jnp.take_along_axis(first, sorted_e, axis=1)
+    pos = jnp.zeros((grp, tg * k), jnp.int32).at[
+        jnp.arange(grp)[:, None], order].set(pos_sorted.astype(jnp.int32))
+    valid = pos < cap
+
+    # --- dispatch: (G, E, C) token-index table, then gather ---
+    tok_ids = jnp.repeat(jnp.arange(tg), k)[None, :]              # (1, Tg*k)
+    safe_pos = jnp.where(valid, pos, cap)
+    table = jnp.full((grp, e, cap + 1), tg, jnp.int32)            # tg = "none"
+    gidx = jnp.broadcast_to(jnp.arange(grp)[:, None], flat_e.shape)
+    table = table.at[gidx, flat_e, safe_pos].set(
+        jnp.where(valid, jnp.broadcast_to(tok_ids, flat_e.shape), tg))
+    table = constrain(table[:, :, :cap], BATCH, None, None)       # (G, E, C)
+    xpad = jnp.concatenate([xf, jnp.zeros((grp, 1, d), xf.dtype)], axis=1)
+    dispatched = jnp.take_along_axis(
+        xpad[:, :, None, :], table[..., None], axis=1)            # (G, E, C, D)
+    # NOTE perf: constraining this buffer 2D (groups x experts) makes XLA's
+    # gather partitioning replicate operands (measured 30.9 s -> 271 s
+    # collective — refuted hypothesis, EXPERIMENTS.md §Perf). Group-sharded
+    # only; the true all-to-all dispatch needs an explicit shard_map
+    # (future work, blocked on the Shardy partitioner).
+    dispatched = constrain(dispatched, BATCH, None, None, None)
+
+    # --- expert compute (EP over "model"; groups gathered per expert) ---
+    g_ = jnp.einsum("gecd,edf->gecf", dispatched, p["w_gate"])
+    u = jnp.einsum("gecd,edf->gecf", dispatched, p["w_up"])
+    y = jnp.einsum("gecf,efd->gecd", jax.nn.silu(g_) * u, p["w_down"])
+    y = constrain(y, BATCH, None, None, None)
+
+    # --- combine: group-local weighted gather back to tokens ---
+    flat_pos = jnp.minimum(pos, cap - 1).reshape(grp, tg, k)
+    gathered = y[jnp.arange(grp)[:, None, None], top_e, flat_pos]
+    gathered = constrain(gathered, BATCH, None, None, None)       # (G,Tg,k,D)
+    w = (top_w * valid.reshape(grp, tg, k)).astype(jnp.float32)
+    out = jnp.sum(gathered.astype(jnp.float32) * w[..., None], axis=2)
+
+    # --- shared experts (Qwen2-MoE): dense MLP + sigmoid gate ---
+    if "shared" in p:
+        sp = p["shared"]
+        sg = jax.nn.silu(xf @ sp["w_gate"]) * (xf @ sp["w_up"])
+        shared_out = sg @ sp["w_down"]
+        gate = jax.nn.sigmoid(
+            xf.astype(jnp.float32) @ p["shared_gate"][:, None])
+        out = out + shared_out.astype(jnp.float32) * gate
+
+    return out.reshape(b, s, d).astype(x.dtype), aux

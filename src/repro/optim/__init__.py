@@ -1,0 +1,6 @@
+from repro.optim.adamw import (AdamWConfig, adamw_init, adamw_update,
+                               cast_params, global_norm)
+from repro.optim.schedule import cosine_schedule
+
+__all__ = ["AdamWConfig", "adamw_init", "adamw_update", "cast_params",
+           "global_norm", "cosine_schedule"]

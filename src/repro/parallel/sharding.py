@@ -1,0 +1,212 @@
+"""Sharding rules: DP / TP / EP / SP over the ("pod", "data", "model") mesh.
+
+Rules are name+shape based over the param pytree:
+
+  * TP ("model"):  attention q-heads, kv-heads (when divisible), FFN hidden,
+    MoE experts (EP), Mamba2 inner/heads, vocab dim of embeddings.
+  * DP ("pod","data"): the batch dim of activations and caches.
+  * ZeRO-1 ("data"): optimizer master/m/v leaves get "data" inserted into the
+    first still-unsharded, divisible dim (reduce-scatter + all-gather emerge
+    from XLA sharding propagation alone).
+  * SP: decode KV caches shard the *sequence* dim over "model" (and over
+    "data" too when the batch dim can't use it — long_500k batch=1).
+
+Every rule degrades to replication when a dim isn't divisible (e.g. gemma-2b's
+8 q-heads on a 16-way model axis) — documented fallback, not an error.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ArchConfig
+
+PyTree = Any
+
+
+def axis_size(mesh: Mesh, name: str) -> int:
+    return mesh.shape[name] if name in mesh.axis_names else 1
+
+
+def batch_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def dp_size(mesh: Mesh) -> int:
+    return int(np.prod([axis_size(mesh, a) for a in batch_axes(mesh)]))
+
+
+def _div(n: int, d: int) -> bool:
+    return d > 0 and n % d == 0 and n >= d
+
+
+# --------------------------------------------------------------------------- #
+# Parameter specs
+# --------------------------------------------------------------------------- #
+def _leaf_spec(name: str, shape: Tuple[int, ...], cfg: ArchConfig,
+               tp: int, stacked: bool) -> P:
+    """PartitionSpec for one (unstacked) param leaf; `stacked` prepends None."""
+    base = shape[1:] if stacked else shape
+    h, kh = cfg.num_heads, cfg.num_kv_heads
+    hd = cfg.resolved_head_dim
+
+    def spec(*parts):
+        out = (None,) + parts if stacked else parts
+        return P(*out)
+
+    if name == "w" and len(base) == 2:  # embed / lm_head (V, D)
+        return spec("model" if _div(base[0], tp) else None, None)
+    if name in ("wq",):
+        return spec(None, "model" if _div(h, tp) else None)
+    if name in ("wk", "wv"):
+        return spec(None, "model" if _div(kh, tp) else None)
+    if name == "wo":
+        return spec("model" if _div(h, tp) else None, None)
+    if name in ("w_gate", "w_up") and len(base) == 3:  # MoE experts (E, D, F)
+        return spec("model" if _div(base[0], tp) else None, None, None)
+    if name == "w_down" and len(base) == 3:
+        return spec("model" if _div(base[0], tp) else None, None, None)
+    if name in ("w_gate", "w_up") and len(base) == 2:  # dense MLP (D, F)
+        return spec(None, "model" if _div(base[1], tp) else None)
+    if name == "w_down" and len(base) == 2:            # (F, D)
+        return spec("model" if _div(base[0], tp) else None, None)
+    if name == "router":
+        return spec(None, None)
+    # --- Mamba2 ---
+    if name in ("w_x", "w_z"):  # (D, inner) — inner is head-major
+        return spec(None, "model" if _div(cfg.ssm_heads, tp) else None)
+    if name == "w_dt":          # (D, H)
+        return spec(None, "model" if _div(cfg.ssm_heads, tp) else None)
+    if name in ("w_b", "w_c"):  # (D, N) — single SSD group, replicated
+        return spec(None, None)
+    if name == "conv_x":        # (inner, k)
+        return spec("model" if _div(cfg.ssm_heads, tp) else None, None)
+    if name in ("conv_b", "conv_c"):
+        return spec(None, None)
+    if name in ("a_log", "d_skip", "dt_bias"):  # (H,)
+        return spec("model" if _div(cfg.ssm_heads, tp) else None)
+    if name == "norm":          # (inner,)
+        return spec("model" if _div(cfg.ssm_heads, tp) else None)
+    if name == "out":           # (inner, D)
+        return spec("model" if _div(cfg.ssm_heads, tp) else None, None)
+    # norms / small vectors / shared_gate
+    return spec(*([None] * len(base)))
+
+
+_STACKED_ROOTS = ("blocks", "encoder", "decoder")
+
+
+def param_pspecs(cfg: ArchConfig, specs: PyTree, mesh: Mesh,
+                 *, fsdp: bool = False) -> PyTree:
+    """TP specs; with fsdp=True every leaf additionally shards its first
+    free divisible dim over "data" (ZeRO-3 / fully-sharded storage — XLA
+    inserts the per-layer all-gather inside the scan body)."""
+    tp = axis_size(mesh, "model")
+    dz = axis_size(mesh, "data")
+
+    def rule(path, leaf):
+        keys = [getattr(k, "key", getattr(k, "name", None)) for k in path]
+        stacked = any(k in _STACKED_ROOTS for k in keys)
+        spec = _leaf_spec(keys[-1], leaf.shape, cfg, tp, stacked)
+        # embeddings stay TP-only: FSDP-sharding the (V, D) tables makes the
+        # logits einsum contract over a "data"-sharded dim and the partitioner
+        # replicates the (B, S, V) logits — a ~250 GB/device regression
+        # (measured; EXPERIMENTS.md perf log).
+        if fsdp and keys[0] not in ("embed", "lm_head"):
+            spec = zero_spec(spec, leaf.shape, dz, "data")
+        return spec
+
+    return jax.tree_util.tree_map_with_path(rule, specs)
+
+
+# --------------------------------------------------------------------------- #
+# ZeRO-1: optimizer-state sharding over "data"
+# --------------------------------------------------------------------------- #
+def zero_spec(spec: P, shape: Tuple[int, ...], zero: int,
+              axis: str = "data") -> P:
+    parts = list(spec) + [None] * (len(shape) - len(spec))
+    for p in parts:  # already sharded over `axis` (e.g. FSDP params): no-op
+        if p == axis or (isinstance(p, (tuple, list)) and axis in p):
+            return P(*parts)
+    for i, (p, n) in enumerate(zip(parts, shape)):
+        if p is None and _div(n, zero):
+            parts[i] = axis
+            return P(*parts)
+    return P(*parts)  # nothing divisible: stays unsharded on `axis` (tiny leaf)
+
+
+def zero_pspecs(pspecs: PyTree, specs: PyTree, mesh: Mesh,
+                axis: str = "data") -> PyTree:
+    z = axis_size(mesh, axis)
+    return jax.tree.map(lambda p, s: zero_spec(p, s.shape, z, axis),
+                        pspecs, specs)
+
+
+# --------------------------------------------------------------------------- #
+# Input / cache / activation specs
+# --------------------------------------------------------------------------- #
+def input_pspecs(cfg: ArchConfig, specs: Dict, mesh: Mesh) -> Dict:
+    dp = batch_axes(mesh)
+    dpn = dp_size(mesh)
+
+    def rule(path, leaf):
+        keys = [getattr(k, "key", getattr(k, "name", None)) for k in path]
+        if "cache" in keys:
+            return _cache_leaf_spec(keys, leaf, cfg, mesh)
+        b = leaf.shape[0]
+        lead = dp if _div(b, dpn) else None
+        return P(lead, *([None] * (len(leaf.shape) - 1)))
+
+    return jax.tree_util.tree_map_with_path(rule, specs)
+
+
+def _cache_leaf_spec(keys, leaf, cfg: ArchConfig, mesh: Mesh) -> P:
+    dp = batch_axes(mesh)
+    dpn = dp_size(mesh)
+    tp = axis_size(mesh, "model")
+    name = keys[-1]
+    if name == "index":
+        return P()
+    if name in ("k", "v", "cross_k", "cross_v"):
+        _, b, t, kh, _ = leaf.shape
+        b_ax = dp if _div(b, dpn) else None
+        # SP: sequence over "model"; if batch idle, use ("data","model")
+        if b_ax is None and _div(t, dpn * tp):
+            t_ax: Any = tuple(a for a in ("pod", "data", "model")
+                              if a in mesh.axis_names)
+        elif _div(t, tp):
+            t_ax = "model"
+        else:
+            t_ax = None
+        return P(None, b_ax, t_ax, None, None)
+    # mamba decode state
+    if name == "ssm":            # (L, B, H, N, P)
+        _, b, h, _, _ = leaf.shape
+        return P(None, dp if _div(b, dpn) else None,
+                 "model" if _div(h, tp) else None, None, None)
+    if name in ("conv_x",):      # (L, B, k-1, inner)
+        _, b, _, inner = leaf.shape
+        return P(None, dp if _div(b, dpn) else None, None,
+                 "model" if _div(cfg.ssm_heads, tp) else None)
+    if name in ("conv_b", "conv_c"):
+        _, b, _, _ = leaf.shape
+        return P(None, dp if _div(b, dpn) else None, None, None)
+    raise ValueError(f"unknown cache leaf {keys}")
+
+
+def cache_pspecs(cfg: ArchConfig, cache_specs: PyTree, mesh: Mesh) -> PyTree:
+    def rule(path, leaf):
+        keys = ["cache"] + [getattr(k, "key", getattr(k, "name", None))
+                            for k in path]
+        return _cache_leaf_spec(keys, leaf, cfg, mesh)
+
+    return jax.tree_util.tree_map_with_path(rule, cache_specs)
+
+
+def to_named(pspecs: PyTree, mesh: Mesh) -> PyTree:
+    return jax.tree.map(lambda p: NamedSharding(mesh, p), pspecs,
+                        is_leaf=lambda x: isinstance(x, P))

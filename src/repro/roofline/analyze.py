@@ -1,0 +1,244 @@
+"""Roofline analysis from a compiled dry-run artifact.
+
+Three terms per (arch, shape, mesh):
+
+    compute    = HLO_FLOPs_per_device / PEAK_FLOPS
+    memory     = HLO_bytes_per_device / HBM_BW
+    collective = collective_bytes_per_device / ICI_LINK_BW
+
+``cost_analysis()`` reports per-device FLOPs/bytes (verified empirically:
+reported FLOPs ~= analytic_global / n_devices). Collective bytes are parsed
+from the post-SPMD compiled HLO text — shapes there are per-device shard
+shapes — by summing operand sizes of every all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute.
+"""
+from __future__ import annotations
+
+import re
+from collections import Counter
+from dataclasses import asdict, dataclass, field
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.roofline import hw
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g. "f32[8,128]{1,0}" or "bf16[4,16,128]"
+_SHAPE_RE = re.compile(r"\b(pred|s8|u8|s16|u16|bf16|f16|s32|u32|f32|s64|u64|f64)"
+                       r"\[([0-9,]*)\]")
+# `  %name = <result shapes> <op>(...)` — operands are %refs (no shapes), so we
+# parse the result shape(s) and convert to operand bytes per op semantics.
+_OP_RE = re.compile(
+    r"=\s+(.*?)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start|-done)?\(")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_BRACE_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return int(m.group(2))  # [num_groups, group_size]<=[...]
+    m = _GROUPS_BRACE_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return 1
+
+
+def parse_collectives(hlo_text: str) -> Dict:
+    """Per-device collective bytes by kind from compiled (post-SPMD) HLO text.
+
+    Reports two aggregates:
+      * total_bytes      — sum of operand sizes (the assignment's definition)
+      * wire_bytes       — ring-algorithm bytes actually crossing links per
+                           device (2(g-1)/g x size for all-reduce, (g-1)/g for
+                           gather/scatter/all-to-all, size for permute)
+    """
+    bytes_by_kind: Counter = Counter()
+    wire_by_kind: Counter = Counter()
+    count_by_kind: Counter = Counter()
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        result_txt, kind, suffix = m.group(1), m.group(2), m.group(3)
+        if suffix == "-done":
+            continue  # async pair: -start already counted
+        shapes = [_shape_bytes(d, dims)
+                  for d, dims in _SHAPE_RE.findall(result_txt)]
+        if not shapes:
+            continue
+        # async start ops carry (operand, result, ...) tuples: use the largest
+        result_bytes = max(shapes) if suffix == "-start" else sum(shapes)
+        g = max(_group_size(line), 1)
+        if kind == "all-gather":
+            operand = result_bytes // max(g, 1)
+            wire = result_bytes * (g - 1) // max(g, 1)
+        elif kind == "reduce-scatter":
+            operand = result_bytes * g
+            wire = operand * (g - 1) // max(g, 1)
+        elif kind == "all-reduce":
+            operand = result_bytes
+            wire = 2 * result_bytes * (g - 1) // max(g, 1)
+        elif kind == "all-to-all":
+            operand = result_bytes
+            wire = result_bytes * (g - 1) // max(g, 1)
+        else:  # collective-permute
+            operand = result_bytes
+            wire = result_bytes
+        bytes_by_kind[kind] += operand
+        wire_by_kind[kind] += wire
+        count_by_kind[kind] += 1
+    return {
+        "bytes_by_kind": dict(bytes_by_kind),
+        "wire_by_kind": dict(wire_by_kind),
+        "count_by_kind": dict(count_by_kind),
+        "total_bytes": int(sum(bytes_by_kind.values())),
+        "wire_bytes": int(sum(wire_by_kind.values())),
+        "total_count": int(sum(count_by_kind.values())),
+    }
+
+
+@dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    n_devices: int
+    flops_per_device: float
+    hbm_bytes_per_device: float          # XLA-measured (CPU fusion; reference)
+    hbm_bytes_flash_adj: float           # measured minus score-tensor traffic
+    hbm_bytes_model: float               # first-principles model (memory term)
+    collective_bytes_per_device: float
+    collective_wire_bytes: float
+    peak_memory_per_device: float        # from the PRODUCTION compile
+    compute_s: float = 0.0
+    memory_s: float = 0.0                # from flash-adjusted bytes
+    memory_s_raw: float = 0.0
+    collective_s: float = 0.0
+    bottleneck: str = ""
+    model_flops: float = 0.0             # 6*N*D train / 2*N*D inference
+    useful_ratio: float = 0.0            # model_flops / (flops_per_device*n)
+    roofline_fraction: float = 0.0
+    collectives: Dict = field(default_factory=dict)
+    fits_hbm: bool = True
+    notes: str = ""
+
+    def finalize(self) -> "RooflineReport":
+        self.compute_s = self.flops_per_device / hw.PEAK_FLOPS
+        self.memory_s = self.hbm_bytes_model / hw.HBM_BW
+        self.memory_s_raw = self.hbm_bytes_per_device / hw.HBM_BW
+        self.collective_s = self.collective_bytes_per_device / hw.ICI_LINK_BW
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        self.bottleneck = max(terms, key=terms.get)
+        total_flops = self.flops_per_device * self.n_devices
+        self.useful_ratio = (self.model_flops / total_flops) if total_flops else 0.0
+        # achievable fraction: time of the ideal (pure model-FLOPs) step vs.
+        # the dominant roofline term of this compilation.
+        ideal = self.model_flops / (self.n_devices * hw.PEAK_FLOPS)
+        dom = max(terms.values())
+        self.roofline_fraction = (ideal / dom) if dom > 0 else 0.0
+        self.fits_hbm = self.peak_memory_per_device <= hw.HBM_BYTES
+        return self
+
+    def to_dict(self) -> Dict:
+        return asdict(self)
+
+
+def attention_score_bytes(cfg, shape, n_devices: int) -> float:
+    """Analytic per-device HBM traffic of the dense-form (Sq x Skv) score
+    tensors that the production blockwise/flash form never materializes.
+    Convention: 4 accesses/elt fp32 forward; x3 for train (remat re-fwd +
+    dscore traffic). Decode has no score materialization worth adjusting."""
+    if shape.kind == "decode":
+        return 0.0
+    b, s = shape.global_batch, shape.seq_len
+    acc = 4 * (3 if shape.kind == "train" else 1) * 4  # accesses x bytes
+    elems = 0.0
+    if cfg.family in ("dense", "moe", "vlm"):
+        elems = cfg.num_layers * b * cfg.num_heads * float(s) * s
+    elif cfg.family == "encdec":
+        se = cfg.encoder_seq
+        elems = (cfg.encoder_layers * b * cfg.num_heads * float(se) * se
+                 + cfg.num_layers * b * cfg.num_heads * (float(s) * s +
+                                                         float(s) * se))
+    elif cfg.family in ("ssm", "hybrid"):
+        lc = cfg.ssm_chunk
+        nc = (s + lc - 1) // lc
+        elems = cfg.num_layers * b * cfg.ssm_heads * nc * float(lc) * lc
+        if cfg.family == "hybrid":
+            n_attn = sum(1 for k in cfg.layer_kinds() if k == "mamba_attn")
+            elems += n_attn * b * cfg.num_heads * float(s) * s
+    return acc * elems / n_devices
+
+
+def analyze_from_costs(costs: Dict, production_compiled, *, arch: str, shape,
+                       mesh_name: str, n_devices: int, model_flops: float,
+                       cfg=None, hbm_model_bytes: float = 0.0,
+                       notes: str = "") -> RooflineReport:
+    """Build the report from probe-extrapolated costs (roofline/probes.py)."""
+    mem = production_compiled.memory_analysis()
+    peak_mem = (mem.argument_size_in_bytes + mem.output_size_in_bytes
+                + mem.temp_size_in_bytes - mem.alias_size_in_bytes)
+    raw_bytes = float(costs["bytes"])
+    adj = attention_score_bytes(cfg, shape, n_devices) if cfg is not None else 0.0
+    rep = RooflineReport(
+        arch=arch, shape=shape.name, mesh=mesh_name, n_devices=n_devices,
+        flops_per_device=float(costs["flops"]),
+        hbm_bytes_per_device=raw_bytes,
+        hbm_bytes_flash_adj=max(raw_bytes - adj, 0.0),
+        hbm_bytes_model=float(hbm_model_bytes) or max(raw_bytes - adj, 0.0),
+        collective_bytes_per_device=float(costs["coll_bytes"]),
+        collective_wire_bytes=float(costs["wire_bytes"]),
+        peak_memory_per_device=float(peak_mem),
+        model_flops=float(model_flops),
+        collectives={"extrapolated_count": costs["coll_count"]},
+        notes=notes,
+    )
+    return rep.finalize()
+
+
+def analyze(analysis_compiled, production_compiled, *, arch: str, shape,
+            mesh_name: str, n_devices: int, model_flops: float,
+            cfg=None, hbm_model_bytes: float = 0.0,
+            notes: str = "") -> RooflineReport:
+    cost = analysis_compiled.cost_analysis()
+    coll = parse_collectives(analysis_compiled.as_text())
+    mem = production_compiled.memory_analysis()
+    peak_mem = (mem.argument_size_in_bytes + mem.output_size_in_bytes
+                + mem.temp_size_in_bytes - mem.alias_size_in_bytes)
+    raw_bytes = float(cost.get("bytes accessed", 0.0))
+    adj = attention_score_bytes(cfg, shape, n_devices) if cfg is not None else 0.0
+    rep = RooflineReport(
+        arch=arch, shape=shape.name, mesh=mesh_name, n_devices=n_devices,
+        flops_per_device=float(cost.get("flops", 0.0)),
+        hbm_bytes_per_device=raw_bytes,
+        hbm_bytes_flash_adj=max(raw_bytes - adj, 0.0),
+        hbm_bytes_model=float(hbm_model_bytes) or max(raw_bytes - adj, 0.0),
+        collective_bytes_per_device=float(coll["total_bytes"]),
+        collective_wire_bytes=float(coll["wire_bytes"]),
+        peak_memory_per_device=float(peak_mem),
+        model_flops=float(model_flops),
+        collectives=coll,
+        notes=notes,
+    )
+    return rep.finalize()

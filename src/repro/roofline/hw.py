@@ -1,0 +1,7 @@
+"""Target-hardware constants (TPU v5e-class chip, per assignment):
+197 TFLOP/s bf16 per chip, 819 GB/s HBM, ~50 GB/s/link ICI, 16 GiB HBM."""
+
+PEAK_FLOPS = 197e12         # bf16 FLOP/s per chip
+HBM_BW = 819e9              # bytes/s per chip
+ICI_LINK_BW = 50e9          # bytes/s per ICI link
+HBM_BYTES = 16 * 1024**3    # per-chip HBM capacity

@@ -1,0 +1,71 @@
+"""Failover timeline orchestration (paper Fig. 1, Table 5).
+
+Models both flows over the same recovery steps:
+  serial (PyTorch/Gemini-style):   detect -> pod -> deps -> network -> state
+  FFTrainer (overlapped):          detect -> pod (pre-pulled) ->
+                                   max(network-recovery, state-load)   [§5.2]
+plus lazy backup running in parallel with pod creation (§4.2).
+
+Step costs are either measured on our own control-plane code (connection
+building, heartbeat processing — see benchmarks fig8/fig10) or taken from the
+paper's measured Table 5 for orchestration steps we can only model (Docker
+pulls, pod scheduling).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict
+
+from repro.core.detection import DetectionTimeline
+
+
+@dataclass(frozen=True)
+class FailoverCosts:
+    # paper Table 5 measured values (seconds)
+    detection_baseline: float = 15.0
+    pod_creation_baseline: float = 392.0
+    dependency_baseline: float = 421.0
+    detection_fft: float = 6.0
+    pod_creation_fft: float = 7.0
+    dependency_fft: float = 0.0
+    # bandwidths for state movement
+    neighbor_bw: float = 50e9          # ICI link (instant ckpt fetch)
+    storage_bw: float = 1e9            # remote storage (baseline reload)
+    # network-recovery scaling (calibrated on our lock-free init, fig8)
+    conn_base: float = 0.5
+    conn_per_worker: float = 0.001
+    conn_per_worker_baseline: float = 0.08
+
+
+def fftrainer_timeline(n_workers: int, state_bytes_per_worker: float,
+                       costs: FailoverCosts = FailoverCosts(),
+                       detection: DetectionTimeline = DetectionTimeline()
+                       ) -> Dict[str, float]:
+    t_net = costs.conn_base + costs.conn_per_worker * n_workers
+    t_state = state_bytes_per_worker / costs.neighbor_bw + 0.2
+    tl = {
+        # lower-bounded by our measured heartbeat path; paper measured 6 s
+        "detection": max(detection.detection_time(), costs.detection_fft),
+        "pod_creation": costs.pod_creation_fft,
+        "dependency_install": costs.dependency_fft,
+        # role/rank decoupling overlaps the two (§5.2)
+        "network_and_state": max(t_net, t_state),
+    }
+    tl["total"] = sum(v for k, v in tl.items())
+    return tl
+
+
+def baseline_timeline(n_workers: int, state_bytes_per_worker: float,
+                      costs: FailoverCosts = FailoverCosts()
+                      ) -> Dict[str, float]:
+    t_net = costs.conn_base + costs.conn_per_worker_baseline * n_workers
+    t_state = state_bytes_per_worker / costs.storage_bw + 2.0
+    tl = {
+        "detection": costs.detection_baseline,
+        "pod_creation": costs.pod_creation_baseline,
+        "dependency_install": costs.dependency_baseline,
+        "network_recovery": t_net,
+        "state_recovery": t_state,      # serial: after network
+    }
+    tl["total"] = sum(tl.values())
+    return tl

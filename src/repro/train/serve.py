@@ -1,0 +1,56 @@
+"""Serving step builders: prefill and KV/SSM-cache decode, SPMD-sharded.
+
+decode: cache is donated (in-place update) — the per-token working set is the
+cache read + params read, which is what the decode roofline measures.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+from jax.sharding import Mesh
+
+from repro.models import Model
+from repro.parallel import sharding as shd
+from repro.train.state import make_state_plan
+
+PyTree = Any
+
+
+def build_prefill_step(model: Model, mesh: Mesh, shape):
+    cfg = model.cfg
+    plan = make_state_plan(model, mesh)
+    input_pspecs = shd.input_pspecs(cfg, model.input_specs(shape), mesh)
+    cache_sp = shd.cache_pspecs(
+        cfg, model.cache_specs(shape.global_batch, shape.seq_len), mesh)
+
+    def prefill(params, batch):
+        return model.prefill(params, batch)
+
+    fn = jax.jit(
+        prefill,
+        in_shardings=(shd.to_named(plan.param_pspecs, mesh),
+                      shd.to_named(input_pspecs, mesh)),
+        out_shardings=(None, shd.to_named(cache_sp, mesh)),
+    )
+    return fn, plan, input_pspecs
+
+
+def build_decode_step(model: Model, mesh: Mesh, shape):
+    cfg = model.cfg
+    plan = make_state_plan(model, mesh)
+    input_specs = model.input_specs(shape)
+    input_pspecs = shd.input_pspecs(cfg, input_specs, mesh)
+
+    def decode(params, cache, token):
+        return model.decode_step(params, cache, token)
+
+    fn = jax.jit(
+        decode,
+        in_shardings=(shd.to_named(plan.param_pspecs, mesh),
+                      shd.to_named(input_pspecs["cache"], mesh),
+                      shd.to_named(input_pspecs["token"], mesh)),
+        out_shardings=(None, shd.to_named(input_pspecs["cache"], mesh)),
+        donate_argnums=(1,),
+    )
+    return fn, plan, input_pspecs

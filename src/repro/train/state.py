@@ -1,0 +1,60 @@
+"""TrainState assembly: params (bf16, TP-sharded) + AdamW state (fp32,
+ZeRO-1-sharded) + step counter, with the matching PartitionSpec pytrees."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ArchConfig
+from repro.models import Model
+from repro.optim import adamw_init
+from repro.parallel import sharding as shd
+
+PyTree = Any
+
+
+@dataclass(frozen=True)
+class StatePlan:
+    """Shapes + shardings of the full train state."""
+    state_specs: PyTree       # ShapeDtypeStructs
+    state_pspecs: PyTree      # PartitionSpecs
+    param_pspecs: PyTree
+    opt_pspecs: PyTree        # ZeRO-1 specs for master/m/v
+
+
+def make_state_specs(model: Model) -> PyTree:
+    param_specs = model.param_specs()
+    opt_specs = jax.eval_shape(adamw_init, param_specs)
+    return {
+        "step": jax.ShapeDtypeStruct((), jnp.int32),
+        "params": param_specs,
+        "opt": opt_specs,
+    }
+
+
+def make_state_plan(model: Model, mesh: Mesh, *,
+                    fsdp_params: bool = False) -> StatePlan:
+    cfg = model.cfg
+    state_specs = make_state_specs(model)
+    param_pspecs = shd.param_pspecs(cfg, state_specs["params"], mesh,
+                                    fsdp=fsdp_params)
+    opt_pspecs = {
+        k: shd.zero_pspecs(param_pspecs, state_specs["params"], mesh)
+        for k in ("master", "m", "v")
+    }
+    state_pspecs = {"step": P(), "params": param_pspecs, "opt": opt_pspecs}
+    return StatePlan(state_specs, state_pspecs, param_pspecs, opt_pspecs)
+
+
+def init_state(model: Model, key: jax.Array) -> PyTree:
+    params = model.init(key)
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "params": params,
+        "opt": adamw_init(params),
+    }

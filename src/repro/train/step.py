@@ -1,0 +1,156 @@
+"""Train/serve step builders.
+
+``build_train_step`` returns a jit-compiled SPMD step:
+
+    new_state, metrics, backup = step(state, batch)
+
+with the paper's instant checkpoint fused in: ``backup`` is the ZeRO-unique
+optimizer shard permuted one hop along the DP ring (core/instant.py), an
+explicit collective-permute in the compiled HLO that XLA overlaps with
+compute. ``backup`` leaves are None when instant checkpointing is disabled or
+the leaf is razor-redundant.
+
+Optional beyond-paper feature: int8 cross-pod gradient compression
+(parallel/compression.py) applied before the optimizer update.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.core.instant import neighbor_backup
+from repro.core.razor import RazorPlan, razor_plan
+from repro.models import Model
+from repro.optim import AdamWConfig, adamw_update, cast_params, cosine_schedule
+from repro.parallel import sharding as shd
+from repro.train.state import StatePlan, make_state_plan
+
+PyTree = Any
+
+
+@dataclass(frozen=True)
+class StepArtifacts:
+    step_fn: Callable            # jitted
+    plan: StatePlan
+    razor: RazorPlan
+    input_pspecs: PyTree
+    backup_pspecs: PyTree        # None-leaved pytree matching backup output
+
+
+def build_train_step(
+    model: Model,
+    mesh: Mesh,
+    hp: AdamWConfig = AdamWConfig(),
+    *,
+    instant_ckpt: bool = True,
+    backup_axis: str = "data",
+    compress_pod_grads: bool = False,
+    fsdp_params: bool = True,
+    microbatches: int = 1,
+    donate: bool = True,
+    shape=None,
+) -> StepArtifacts:
+    cfg = model.cfg
+    plan = make_state_plan(model, mesh, fsdp_params=fsdp_params)
+    razor = razor_plan(plan.state_specs["opt"], plan.opt_pspecs,
+                       plan.state_specs["params"], mesh, zero_axis=backup_axis)
+
+    # backup = unique opt leaves only (razor) when instant ckpt is on
+    if instant_ckpt and mesh.shape.get(backup_axis, 1) > 1:
+        backup_pspecs = jax.tree.map(
+            lambda ps, m: ps if m else None, plan.opt_pspecs, razor.unique_mask,
+            is_leaf=lambda x: isinstance(x, P))
+    else:
+        backup_pspecs = jax.tree.map(lambda ps: None, plan.opt_pspecs,
+                                     is_leaf=lambda x: isinstance(x, P))
+
+    input_pspecs = shd.input_pspecs(cfg, model.input_specs(shape), mesh) \
+        if shape else None
+
+    use_compression = (compress_pod_grads and "pod" in mesh.axis_names
+                       and mesh.shape["pod"] > 1 and input_pspecs is not None)
+
+    def train_step(state, batch):
+        if use_compression:
+            from repro.parallel.compression import \
+                pod_compressed_value_and_grad
+            vg = pod_compressed_value_and_grad(
+                lambda p, b: model.loss(p, b), mesh, plan.param_pspecs,
+                input_pspecs)
+            (loss, aux), grads = vg(state["params"], batch)
+        elif microbatches > 1:
+            # gradient accumulation: scan over microbatches — divides the live
+            # activation footprint by `microbatches` at the cost of
+            # re-gathering FSDP-sharded params once per microbatch
+            mb = jax.tree.map(
+                lambda x: x.reshape(microbatches, x.shape[0] // microbatches,
+                                    *x.shape[1:]), batch)
+            gzero = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state["params"])
+
+            def mb_body(gsum, b):
+                (l, aux), g = jax.value_and_grad(
+                    lambda p: model.loss(p, b), has_aux=True)(state["params"])
+                gsum = jax.tree.map(
+                    lambda a, x: a + x.astype(jnp.float32), gsum, g)
+                return gsum, (l, aux)
+
+            gsum, (ls, auxs) = jax.lax.scan(mb_body, gzero, mb)
+            grads = jax.tree.map(lambda g: g / microbatches, gsum)
+            loss = jnp.mean(ls)
+            aux = jax.tree.map(jnp.mean, auxs)
+        else:
+            (loss, aux), grads = jax.value_and_grad(
+                lambda p: model.loss(p, batch), has_aux=True)(state["params"])
+
+        lr = cosine_schedule(state["step"], lr=hp.lr,
+                             warmup_steps=hp.warmup_steps,
+                             total_steps=hp.total_steps)
+        _, new_opt = adamw_update(grads, state["opt"], state["step"], hp, lr)
+        new_params = cast_params(new_opt["master"], state["params"])
+        new_state = {"step": state["step"] + 1, "params": new_params,
+                     "opt": new_opt}
+
+        backup = _mask(new_opt, backup_pspecs)
+        backup = neighbor_backup(backup, backup_pspecs, mesh, axis=backup_axis)
+
+        metrics = {"loss": loss, **aux, "lr": lr}
+        return new_state, metrics, backup
+
+    metrics_shard = None  # replicated scalars; let XLA infer
+    backup_shardings = jax.tree.map(
+        lambda ps: NamedSharding(mesh, ps) if ps is not None else None,
+        backup_pspecs, is_leaf=lambda x: isinstance(x, P) or x is None)
+
+    jit_kwargs: Dict[str, Any] = dict(
+        in_shardings=(shd.to_named(plan.state_pspecs, mesh),
+                      shd.to_named(input_pspecs, mesh) if input_pspecs else None),
+        out_shardings=(shd.to_named(plan.state_pspecs, mesh),
+                       metrics_shard, backup_shardings),
+    )
+    if donate:
+        jit_kwargs["donate_argnums"] = (0,)
+
+    if fsdp_params:
+        from repro.models.modes import fsdp_unshard
+
+        def traced(state, batch):
+            with fsdp_unshard():
+                return train_step(state, batch)
+
+        step_fn = jax.jit(traced, **jit_kwargs)
+    else:
+        step_fn = jax.jit(train_step, **jit_kwargs)
+    return StepArtifacts(step_fn, plan, razor, input_pspecs, backup_pspecs)
+
+
+def _mask(tree: PyTree, mask_pspecs: PyTree) -> PyTree:
+    is_p = lambda x: isinstance(x, P) or x is None
+    return jax.tree.map(lambda ps, x: None if ps is None else x,
+                        mask_pspecs, tree, is_leaf=is_p)

@@ -1,0 +1,13 @@
+import os
+
+# Keep tests on the single real CPU device — the 512-device virtual mesh is
+# set ONLY by launch/dryrun.py (and by subprocess tests that opt in).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,124 @@
+"""Controller / LCCL control-plane coverage: role tables, ring peers, data
+fan-out, heartbeat detection, HLO collective parsing, probe features."""
+import numpy as np
+import pytest
+
+from repro.core.controller import StateController
+from repro.core.lccl import LockFreeAddressArray, Role, RoleTable
+from repro.roofline.analyze import parse_collectives
+
+
+def test_role_table_ring_peers():
+    t = RoleTable(dp=4, pp=2, tp=2)
+    peers = t.ring_peers(Role(0, 0, 1))
+    assert peers["dp_next"] == Role(1, 0, 1)
+    assert peers["dp_prev"] == Role(3, 0, 1)
+    assert peers["pp_next"] == Role(0, 1, 1)
+    # <=4 inter-node connections per worker (paper §5.1 group-free claim)
+    assert len(peers) == 4
+
+
+def test_role_rebind_preserves_role_identity():
+    t = RoleTable(dp=2, pp=1, tp=1)
+    old_rank = t.role_to_rank[(1, 0, 0)]
+    role = t.rebind(old_rank, 999)
+    assert role == Role(1, 0, 0)
+    assert t.role_to_rank[(1, 0, 0)] == 999
+    assert t.rank_to_role[999] == role
+    assert old_rank not in t.rank_to_role
+
+
+def test_controller_fanout_targets_tp_rank0_only():
+    c = StateController(dp=4, pp=2, tp=4, global_batch=16)
+    targets = c.fanout_targets()
+    # one per (dp, pp) group => dp*pp, not dp*pp*tp (paper §4.3)
+    assert len(targets) == 8
+    for r in targets:
+        assert c.roles.rank_to_role[r].tp == 0
+
+
+def test_controller_assignment_exact_cover_and_elastic():
+    c = StateController(dp=4, pp=1, tp=1, global_batch=16)
+    a = c.assignment(3, dataset_size=1024)
+    spans = sorted(a.ranges.values())
+    assert spans[0][0] == (3 * 16) % 1024
+    total = sum(hi - lo for lo, hi in spans)
+    assert total == 16
+    c.shrink_dp([3])
+    a2 = c.assignment(4, dataset_size=1024)
+    assert len(a2.ranges) == 3
+    assert sum(hi - lo for lo, hi in a2.ranges.values()) == 15  # 16//3*3
+
+
+def test_controller_detects_silent_worker():
+    c = StateController(dp=8, pp=1, tp=1, global_batch=8)
+    for w in range(8):
+        c.beat(w, now=10.0)
+    for w in range(8):
+        if w != 5:
+            c.beat(w, now=11.5)
+    assert c.detect_failures(now=11.5) == [5]
+    assert c.detect_failures(now=10.5) == []
+
+
+def test_controller_ckpt_version_resolution():
+    c = StateController(dp=4, pp=1, tp=1, global_batch=8)
+    for g, it in enumerate([100, 101, 100, 101]):
+        c.report_ckpt(g, it)
+    assert c.resolve_recovery_iteration() == 100
+
+
+def test_lockfree_address_array():
+    arr = LockFreeAddressArray(8)
+    for r in range(8):
+        arr.publish(r, 5000 + r)
+    assert arr.connect_all(0, [1, 7]) == [5001, 5007]
+    assert arr.try_read(3) == 5003
+
+
+# ---------------- HLO collective parser ---------------- #
+HLO_SAMPLE = """
+  %ar = f32[64,128]{1,0} all-reduce(%x), replica_groups=[4,2]<=[8], to_apply=%add
+  %ag = f32[64,256]{1,0} all-gather(%y), replica_groups=[2,4]<=[8], dimensions={1}
+  %rs = f32[16,128]{1,0} reduce-scatter(%z), replica_groups=[2,4]<=[8], to_apply=%add
+  %cp = bf16[32,32]{1,0} collective-permute(%w), source_target_pairs={{0,1},{1,0}}
+  %start = (f32[8,8]{1,0}, f32[8,8]{1,0}) all-gather-start(%v), replica_groups=[4,2]<=[8]
+  %done = f32[8,8]{1,0} all-gather-done(%start)
+"""
+
+
+def test_parse_collectives_semantics():
+    out = parse_collectives(HLO_SAMPLE)
+    by = out["bytes_by_kind"]
+    # all-reduce operand = result = 64*128*4
+    assert by["all-reduce"] == 64 * 128 * 4
+    # all-gather operand = result / group_size(4)
+    assert by["all-gather"] == (64 * 256 * 4) // 4 + (8 * 8 * 4) // 2
+    # reduce-scatter operand = result * group_size(4)
+    assert by["reduce-scatter"] == 16 * 128 * 4 * 4
+    assert by["collective-permute"] == 32 * 32 * 2
+    # -done line must not double count
+    assert out["count_by_kind"]["all-gather"] == 2
+    assert out["wire_bytes"] > 0
+
+
+# ---------------- probe feature planning ---------------- #
+def test_probe_plan_families():
+    from repro.configs import get_arch
+    from repro.roofline.probes import probe_plan
+    cfgs, feats, target = probe_plan(get_arch("deepseek-67b"))
+    assert [c.num_layers for c in cfgs] == [2, 4]
+    assert target.tolist() == [1.0, 95.0]
+    cfgs, feats, target = probe_plan(get_arch("zamba2-7b"))
+    assert [c.num_layers for c in cfgs] == [6, 7, 12]
+    assert target.tolist() == [1.0, 81.0, 13.0]  # 13 shared-attn applications
+    cfgs, feats, target = probe_plan(get_arch("whisper-small"))
+    assert all(c.encoder_layers == c.num_layers for c in cfgs)
+
+
+def test_probe_extrapolation_is_exact_for_affine():
+    """lstsq over (1, L) probes recovers an affine cost exactly."""
+    feats = np.array([[1.0, 2.0], [1.0, 4.0]])
+    y = np.array([10.0 + 3.0 * 2, 10.0 + 3.0 * 4])
+    theta, *_ = np.linalg.lstsq(feats, y, rcond=None)
+    assert np.isclose(np.array([1.0, 95.0]) @ theta, 10.0 + 3.0 * 95)

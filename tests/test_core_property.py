@@ -1,0 +1,169 @@
+"""Hypothesis property tests on FFTrainer's core invariants."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.analytic import (cluster_failure_probability, k_failure_prob,
+                                 mfu_loss, recovery_prob_given_k,
+                                 recovery_probability)
+from repro.core.consistency import ReconcileAction, reconcile
+from repro.core.fcr import fcr, is_free
+from repro.core.razor import razor_bytes_formula
+from repro.data.indexer import TidIndexer
+
+
+# --------------------------------------------------------------------------- #
+# Eq. (3): non-adjacent failure probability
+# --------------------------------------------------------------------------- #
+@given(st.integers(4, 64), st.integers(0, 8))
+def test_recovery_prob_given_k_in_unit_interval(n, k):
+    p = recovery_prob_given_k(n, min(k, n))
+    assert 0.0 <= p <= 1.0
+
+
+@given(st.integers(6, 24), st.integers(2, 5))
+@settings(max_examples=30, deadline=None)
+def test_recovery_prob_matches_bruteforce(n, k):
+    """Eq. (3) equals the exhaustive count of adjacent-pair-free subsets on a
+    cycle of n (small n brute force)."""
+    if k > n // 2:
+        return
+    import itertools
+    total = ok = 0
+    for comb in itertools.combinations(range(n), k):
+        total += 1
+        s = set(comb)
+        if not any(((i + 1) % n) in s for i in s):
+            ok += 1
+    expected = ok / total
+    assert math.isclose(recovery_prob_given_k(n, k), expected,
+                        rel_tol=1e-9, abs_tol=1e-12)
+
+
+@given(st.integers(8, 2000), st.floats(0.5, 24.0))
+@settings(max_examples=30, deadline=None)
+def test_recovery_probability_monotone_in_horizon(n, h):
+    assert recovery_probability(n, h) >= recovery_probability(n, h * 2) - 1e-9
+
+
+def test_paper_table2_values():
+    """Table 2: P_16384 and P_65536 at cluster-MTBF horizons."""
+    assert abs(cluster_failure_probability(16384, 3) - 0.46) < 0.01
+    assert abs(cluster_failure_probability(65536, 3) - 0.91) < 0.01
+    assert abs(cluster_failure_probability(16384, 12) - 0.91) < 0.01
+
+
+def test_paper_table6_values():
+    """P(N,H) > 99% for thousands of hosts over 12 h (paper Table 6)."""
+    for hosts, h, lo in [(800, 3, 0.999), (2000, 12, 0.99),
+                         (2000, 3, 0.999)]:
+        assert recovery_probability(hosts, h) > lo
+
+
+@given(st.integers(0, 65), st.integers(1, 200))
+def test_k_failure_prob_is_distribution(k, n):
+    if k > n:
+        return
+    total = sum(k_failure_prob(n, i, 3.0) for i in range(n + 1))
+    assert abs(total - 1.0) < 1e-6
+
+
+# --------------------------------------------------------------------------- #
+# MFU loss / FCR
+# --------------------------------------------------------------------------- #
+@given(st.floats(0.0, 100.0), st.floats(1.0, 10_000.0),
+       st.floats(1.0, 3600.0), st.floats(600.0, 1e6))
+def test_mfu_loss_bounds(t_ckpt, t_i, mttr, mtbf):
+    l = mfu_loss(t_ckpt, t_i, mttr, mtbf)
+    assert 0 <= l.ckpt <= 1 and 0 <= l.recover <= 1 and 0 <= l.rollback <= 1
+
+
+def test_mfu_loss_paper_magnitude():
+    """3-hour MTBF, 30-min interval, zero CKPT overhead -> ~19% loss
+    (paper §3.1 'a 3-hour breakdown results in a 19% MFU loss' includes
+    recovery; with MTTR=1000 s)."""
+    l = mfu_loss(0.0, 1800.0, 1000.0, 3 * 3600.0)
+    assert 0.10 < l.total < 0.25
+
+
+@given(st.integers(128, 1_000_000), st.integers(1, 512),
+       st.floats(1e9, 1e12), st.floats(1e12, 1e16))
+def test_fcr_threshold_consistency(s, b, v, c):
+    assert is_free(s, b, v, c) == (fcr(s, b, v, c) >= 1.0)
+
+
+def test_fcr_matches_overlap_condition():
+    """FCR >= 1 iff T_c >= T'_ckpt for random phi (phi cancels)."""
+    from repro.core.analytic import ckpt_time_razor, compute_time
+    rng = np.random.default_rng(1)
+    for _ in range(100):
+        s = float(rng.integers(128, 1 << 20))
+        b = float(rng.integers(1, 256))
+        v = float(rng.uniform(1e9, 1e12))
+        c = float(rng.uniform(1e12, 1e16))
+        phi = float(rng.uniform(1e6, 1e11))
+        lhs = compute_time(s, b, phi, c) >= ckpt_time_razor(phi, v)
+        assert lhs == is_free(s, b, v, c)
+
+
+# --------------------------------------------------------------------------- #
+# Razor arithmetic
+# --------------------------------------------------------------------------- #
+@given(st.integers(1, 10**12), st.integers(1, 1024))
+def test_razor_bytes_shrink_with_dp(phi, d):
+    assert razor_bytes_formula(phi, d) <= 12 * phi
+    assert razor_bytes_formula(phi, 1) == 12 * phi
+
+
+# --------------------------------------------------------------------------- #
+# Consistency reconciliation
+# --------------------------------------------------------------------------- #
+@given(st.lists(st.integers(100, 101), min_size=2, max_size=16))
+def test_reconcile_one_iteration_skew(versions):
+    acts = reconcile(dict(enumerate(versions)))
+    target = min(versions)
+    for a in acts:
+        assert a.target_iteration == target
+        assert a.action == ("keep" if versions[a.worker] == target
+                            else "rollback")
+
+
+def test_reconcile_rejects_wide_skew():
+    with pytest.raises(AssertionError):
+        reconcile({0: 100, 1: 103})
+
+
+# --------------------------------------------------------------------------- #
+# TID indexer: exact cover + determinism + elasticity
+# --------------------------------------------------------------------------- #
+@given(st.integers(1, 16), st.integers(0, 50), st.integers(1, 4))
+@settings(max_examples=50, deadline=None)
+def test_indexer_exact_cover(dp, iteration, batch_mult):
+    gb = dp * batch_mult * 2
+    idx = TidIndexer(dataset_size=4096, global_batch=gb, seed=3)
+    parts = [idx.indices(iteration, r, dp) for r in range(dp)]
+    allv = np.concatenate(parts)
+    assert len(allv) == gb                      # exact cover
+    g = idx.global_slice(iteration)
+    np.testing.assert_array_equal(np.sort(allv), np.sort(g))
+    # determinism
+    idx2 = TidIndexer(dataset_size=4096, global_batch=gb, seed=3)
+    np.testing.assert_array_equal(idx2.indices(iteration, 0, dp), parts[0])
+
+
+def test_indexer_epoch_permutation_no_repeats():
+    idx = TidIndexer(dataset_size=64, global_batch=16, seed=0)
+    seen = np.concatenate([idx.global_slice(i) for i in range(4)])  # 1 epoch
+    assert len(np.unique(seen)) == 64
+
+
+def test_indexer_elastic_preserves_global_order():
+    """Shrinking dp re-partitions the SAME global slice."""
+    idx = TidIndexer(dataset_size=1024, global_batch=32, seed=1)
+    g = idx.global_slice(7)
+    for dp in (1, 2, 4, 8):
+        parts = np.concatenate([idx.indices(7, r, dp) for r in range(dp)])
+        np.testing.assert_array_equal(parts, g)

@@ -1,0 +1,169 @@
+"""Unit tests: ckpt engine/storage, data loader, LCCL link scheduler,
+detection barrier, failover timelines, memory model."""
+import threading
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ckpt.engine import CkptEngine, CkptEngineConfig
+from repro.ckpt.storage import AsyncWriter, load_pytree, save_pytree
+from repro.core.detection import InterruptibleBarrier, WorkerInterrupted
+from repro.core.lccl import LinkScheduler, ring_allreduce_time
+from repro.data.indexer import TidIndexer
+from repro.data.loader import PrefetchingLoader, SyntheticTokens, buffer_bytes
+
+
+# ---------------- storage ---------------- #
+def test_pytree_roundtrip(tmp_path):
+    tree = {"a": np.arange(6, dtype=np.float32).reshape(2, 3),
+            "b": {"c": np.ones((4,), np.int32)}}
+    save_pytree(tmp_path / "x.npz", tree, {"iteration": 7})
+    like = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+    back = load_pytree(tmp_path / "x.npz", like)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_async_writer(tmp_path):
+    w = AsyncWriter()
+    for i in range(3):
+        w.submit(tmp_path / f"s{i}.npz", {"x": np.full((2,), i)}, block=True)
+    w.close()
+    assert w.saved == 3 and not w.errors
+    assert sorted(p.name for p in tmp_path.glob("*.npz")) == \
+        ["s0.npz", "s1.npz", "s2.npz"]
+
+
+def test_ckpt_engine_full_and_restore(tmp_path):
+    eng = CkptEngine(CkptEngineConfig(out_dir=tmp_path, full_every=5),
+                     worker_id=0)
+    state = {"w": np.arange(8, dtype=np.float32)}
+    assert not eng.maybe_full_checkpoint(3, state)
+    assert eng.maybe_full_checkpoint(5, state)
+    eng.writer.drain()
+    assert eng.latest_full() == 5
+    got = eng.restore_full(5, jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), state))
+    np.testing.assert_array_equal(got["w"], state["w"])
+    eng.close()
+
+
+def test_lazy_backup_rank0_only(tmp_path):
+    eng = CkptEngine(CkptEngineConfig(out_dir=tmp_path), worker_id=3)
+    assert eng.lazy_backup(9, {"p": np.ones(2)}, is_dp_rank0=False) is None
+    path = eng.lazy_backup(9, {"p": np.ones(2)}, is_dp_rank0=True)
+    assert path is not None and path.exists()
+
+
+# ---------------- data loader ---------------- #
+def test_loader_fifo_and_eviction():
+    idx = TidIndexer(256, 8, seed=0)
+    src = SyntheticTokens(256, 16, 100, seed=0)
+    ld = PrefetchingLoader(src, idx, dp_rank=0, active_dp=2, k=3)
+    for it in range(3):
+        assert ld.preload_next(it) is not None
+    assert ld.preload_next(0) is None  # buffer full (k=3)
+    b0 = ld.get(0)
+    assert b0.shape == (4, 17)
+    # deterministic across recoveries
+    ld2 = PrefetchingLoader(src, idx, dp_rank=0, active_dp=2)
+    np.testing.assert_array_equal(ld2.get(0), b0)
+
+
+def test_buffer_bound_formula():
+    # paper: ~40 MB for LLaMA3-70B-scale (s=8192, b=1, k=10)
+    b = buffer_bytes(8192, 1, 10, phi=1e9, bandwidth=25e9, flops=989e12)
+    assert b == pytest.approx(4 * 8192 * 1 * 10)
+    # compute-bound regime: second term binds
+    b2 = buffer_bytes(128, 1, 1000, phi=1e6, bandwidth=1e9, flops=1e15)
+    assert b2 == pytest.approx(6 * 128 * 1 * 1e6 * 1e9 / 1e15)
+
+
+# ---------------- LCCL link scheduler ---------------- #
+def test_train_monopolizes_link():
+    """STATE only moves when the link is idle; TRAIN never waits."""
+    sch = LinkScheduler(bandwidth=1e9, quantum=1e6)
+    tr1 = sch.submit("TRAIN", 1e9, t=0.0)     # 1s of TRAIN at t=0
+    st = sch.submit("STATE", 0.5e9, t=0.0)    # STATE waits
+    tr2 = sch.submit("TRAIN", 1e9, t=1.2)     # more TRAIN at 1.2s
+    sch.run(until=10.0)
+    assert tr1.t_finish == pytest.approx(1.0, rel=1e-6)
+    assert tr2.t_start == pytest.approx(1.2, rel=1e-6)   # TRAIN never queued
+    # STATE squeezed into [1.0, 1.2] then resumed after tr2
+    assert st.t_finish > tr2.t_finish
+    assert st.t_start >= tr1.t_finish
+
+
+def test_ring_allreduce_model_monotone():
+    t1 = ring_allreduce_time(1e9, 8, 25e9)
+    t2 = ring_allreduce_time(2e9, 8, 25e9)
+    assert t2 > t1
+    assert ring_allreduce_time(1e9, 1, 25e9) == 0.0
+
+
+# ---------------- cross-layer detection ---------------- #
+def test_interruptible_barrier_wakes_on_breakdown():
+    bar = InterruptibleBarrier(3)
+    results = {}
+
+    def worker(i):
+        try:
+            bar.wait(i, timeout=5.0)
+            results[i] = "completed"
+        except WorkerInterrupted as e:
+            results[i] = ("interrupted", tuple(e.failed_workers))
+
+    threads = [threading.Thread(target=worker, args=(i,)) for i in range(2)]
+    for t in threads:
+        t.start()
+    time.sleep(0.05)           # workers 0,1 blocked; worker 2 "failed"
+    t0 = time.time()
+    bar.interrupt([2])
+    for t in threads:
+        t.join(timeout=2)
+    dt = time.time() - t0
+    assert dt < 1.0            # woke fast, no 10-minute NCCL timeout
+    assert results[0] == ("interrupted", (2,))
+    assert results[1] == ("interrupted", (2,))
+
+
+def test_barrier_completes_when_all_arrive():
+    bar = InterruptibleBarrier(2)
+    out = []
+    t = threading.Thread(target=lambda: out.append(bar.wait(0, timeout=5)))
+    t.start()
+    time.sleep(0.02)
+    bar.wait(1, timeout=5)
+    t.join(timeout=2)
+    assert out == [0]
+
+
+# ---------------- failover timelines ---------------- #
+def test_timeline_overlap_beats_serial():
+    from repro.runtime.failover import baseline_timeline, fftrainer_timeline
+    fft = fftrainer_timeline(128, 3e9)
+    base = baseline_timeline(128, 3e9)
+    assert fft["total"] < 40.0
+    assert base["total"] > 800.0
+    # the overlapped stage is max(), not sum()
+    assert fft["network_and_state"] < 15.0
+
+
+# ---------------- memory model sanity ---------------- #
+def test_memory_model_param_accounting():
+    import jax
+    from repro.configs import get_arch
+    from repro.launch.mesh import make_single_device_mesh
+    from repro.models import build_model, param_count
+    from repro.roofline.memory_model import sharded_bytes
+    from repro.train.state import make_state_plan
+    cfg = get_arch("qwen3-0.6b")
+    mesh = make_single_device_mesh()
+    model = build_model(cfg)
+    plan = make_state_plan(model, mesh)
+    p = sharded_bytes(plan.state_specs["params"], plan.param_pspecs, mesh)
+    assert p == 2 * param_count(cfg)   # bf16, unsharded on 1x1 mesh
