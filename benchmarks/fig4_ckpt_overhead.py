@@ -13,11 +13,15 @@ from pathlib import Path
 
 from benchmarks.common import row, timeit
 from repro.configs import get_arch, reduce_for_smoke
-from repro.core.analytic import ckpt_time_full, ckpt_time_razor
+from repro.core.analytic import ckpt_time_full
 from repro.models import param_count
 
 
 def _measured(tmp: Path) -> None:
+    # NOTE: the with-ckpt arm now includes the StateStream bookkeeping the
+    # simulator does in-process (shard serialization + per-chunk CRC32), so
+    # overhead_frac upper-bounds the paper's razor+ring-copy cost; on real
+    # hardware the permute is an in-step collective the compiler overlaps.
     from repro.runtime.cluster import SimCluster
     cfg = dataclasses.replace(reduce_for_smoke(get_arch("qwen3-0.6b")),
                               dtype="float32")
@@ -37,6 +41,10 @@ def _measured(tmp: Path) -> None:
     row("fig4/measured/per_iter_instant_ckpt_us", inst[0], "")
     row("fig4/measured/overhead_frac", 0.0,
         f"{(inst[0] - base[0]) / base[0]:.4f}")
+    row("fig4/measured/instant_hidden_iters", 0.0, clu.instant_hidden)
+    row("fig4/measured/instant_exposed_iters", 0.0, clu.instant_exposed)
+    row("fig4/measured/state_chunks_streamed", 0.0,
+        clu.transport.chunks_delivered)
 
 
 def _modeled() -> None:
@@ -59,10 +67,33 @@ def _modeled() -> None:
         t_gem = 2 * 16 * phi / 20e9                    # host copy at 20 GB/s
         row(f"fig4/model/{arch}/gemini_overhead", 0.0,
             f"{t_gem * 0.5 / 60.0:.3f}")
-        # fftrainer: razor shard rides idle links; hidden iff FCR >= 1
-        t_razor = ckpt_time_razor(phi / dps[arch], nic)
+        # fftrainer: razor shard as chunked STATE traffic sharing the NIC
+        # with the gradient allreduce (TRAIN preempts) — overhead is the
+        # schedule's spill past the compute boundary, not a closed form
+        over_fft = _fftrainer_transport_overhead(
+            phi, dps[arch], t_iter, nic, n_iters=5)
         row(f"fig4/model/{arch}/fftrainer_overhead", 0.0,
-            f"{max(t_razor - t_iter, 0.0) / t_iter + 0.01:.3f}")
+            f"{over_fft + 0.01:.3f}")
+
+
+def _fftrainer_transport_overhead(phi: float, dp: int, t_iter: float,
+                                  nic: float, n_iters: int = 5) -> float:
+    """Drive n_iters of TRAIN (bf16 gradient ring-allreduce) + STATE (razor
+    shard chunks) through one LinkScheduler; the exposed overhead is how far
+    the last iteration's checkpoint chunks spill past the final boundary."""
+    from repro.core.lccl import LinkScheduler, submit_chunked
+
+    sched = LinkScheduler(nic, quantum=16 << 20)
+    razor_bytes = 12.0 * phi / dp                 # Adam unique shard / DP
+    wire = 2.0 * (dp - 1) / dp * 2.0 * phi        # bf16 grads on the ring
+    state_transfers = []
+    for i in range(n_iters):
+        t0 = i * t_iter
+        sched.submit("TRAIN", wire, t0)
+        state_transfers.extend(submit_chunked(sched, "STATE", razor_bytes, t0))
+    sched.drain()
+    finish = max(tr.t_finish for tr in state_transfers)
+    return max(finish - n_iters * t_iter, 0.0) / (n_iters * t_iter)
 
 
 def run(tmp: Path = Path("/tmp/repro_bench_fig4")) -> None:

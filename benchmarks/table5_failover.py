@@ -25,8 +25,15 @@ def run(tmp: Path = Path("/tmp/repro_bench_t5")) -> None:
         row(f"table5/{n}gpu/fftrainer/total", 0.0, f"{fft['total']:.1f}")
         row(f"table5/{n}gpu/reduction", 0.0,
             f"{1 - fft['total'] / base['total']:.3f}")
+        # recovery while healthy DP groups keep training: their allreduce
+        # preempts the recovery chunks on the shared link (§5.3) — the
+        # timeline stretches by exactly the scheduler's answer
+        busy = [(0.1 * i, 20e9) for i in range(10)]   # saturating allreduce
+        fftp = fftrainer_timeline(n, state_bytes, train_traffic=busy)
+        row(f"table5/{n}gpu/fftrainer/state_recovery_preempted", 0.0,
+            f"{fftp['network_and_state']:.1f}")
 
-    # end-to-end measured on the simulator (real state movement)
+    # end-to-end measured on the simulator (real chunked state movement)
     from repro.runtime.cluster import SimCluster
     cfg = dataclasses.replace(reduce_for_smoke(get_arch("qwen3-0.6b")),
                               dtype="float32")
@@ -36,6 +43,8 @@ def run(tmp: Path = Path("/tmp/repro_bench_t5")) -> None:
     rep = clu.recover()
     row("table5/sim/recovery_total_s", 0.0, f"{rep.total_time:.1f}")
     row("table5/sim/rolled_back_iters", 0.0, rep.rolled_back_iterations)
+    row("table5/sim/recovery_chunks", 0.0, rep.chunks_sent)
+    row("table5/sim/instant_hidden_iters", 0.0, clu.instant_hidden)
 
 
 if __name__ == "__main__":

@@ -1,6 +1,8 @@
 """End-to-end driver (deliverable b): train a ~100M-param model for a few
 hundred steps with per-iteration instant checkpointing, a mid-run hardware
-failure, recovery, and a bitwise cross-check against an uninterrupted run.
+failure, recovery, and a bitwise cross-check against an uninterrupted run —
+then a MULTI-FAILURE scenario: two concurrent DP-rank failures where the
+second strikes mid-transfer and recovery resumes from partial chunks.
 
     PYTHONPATH=src python examples/train_with_failover.py [--steps 200]
 """
@@ -28,14 +30,15 @@ cfg = ArchConfig(
     mlp_type="swiglu", dtype="float32", remat_policy="none")
 fail_at = args.fail_at if args.fail_at is not None else args.steps // 2
 
-cluster = SimCluster(cfg, dp=2, global_batch=4, seq_len=128,
+cluster = SimCluster(cfg, dp=4, global_batch=4, seq_len=128,
                      dataset_size=8192,
                      ckpt_dir=Path("/tmp/failover_demo_ckpt"), full_every=100,
+                     quantum=1 << 18,
                      hp=AdamWConfig(lr=3e-4, warmup_steps=20,
                                     total_steps=args.steps))
 n_params = sum(int(np.prod(x.shape))
                for x in jax.tree.leaves(cluster.state["params"]))
-print(f"model: {n_params/1e6:.1f}M params, dp=2, seq 128")
+print(f"model: {n_params/1e6:.1f}M params, dp=4, seq 128")
 
 t0 = time.time()
 for step in range(args.steps):
@@ -45,8 +48,8 @@ for step in range(args.steps):
         cluster.inject_failure([0], hardware=True)
         rep = cluster.recover(hardware=True)
         print(f"[{step}] recovered via {rep.recovered_from}, rollback="
-              f"{rep.rolled_back_iterations}, modeled MTTR="
-              f"{rep.total_time:.1f}s\n")
+              f"{rep.rolled_back_iterations}, {rep.chunks_sent} state "
+              f"chunks streamed, modeled MTTR={rep.total_time:.1f}s\n")
     loss = cluster.step()
     if step % 20 == 0 or step == args.steps - 1:
         dt = (time.time() - t0) / (step + 1)
@@ -56,3 +59,28 @@ print(f"\nfinal loss: {cluster.loss_history[-1]:.4f} "
       f"(started at {cluster.loss_history[0]:.4f})")
 assert cluster.loss_history[-1] < cluster.loss_history[0], "did not learn"
 print("training improved the loss through a failure — OK")
+
+# ---------------------------------------------------------------------------
+# Multi-failure: worker 1 dies; while its shard is streaming back, worker 3
+# (non-adjacent — its backup holder is alive) dies too. The second recover()
+# resumes worker 1's transfer from the chunks that already landed instead of
+# restarting it, then recovers both with zero rollback.
+# ---------------------------------------------------------------------------
+print("\n--- multi-failure: second failure mid-transfer ---")
+cluster.inject_failure([1], hardware=True)
+partial = cluster.recover(hardware=True, interrupt_after_chunks=4)
+print(f"transfer interrupted after {partial.chunks_sent}/"
+      f"{partial.chunks_total} chunks (second failure strikes)")
+assert partial.kind == "interrupted"
+
+cluster.inject_failure([3], hardware=True)
+rep2 = cluster.recover(hardware=True)
+print(f"resumed: reused {rep2.chunks_reused} partial chunks, streamed "
+      f"{rep2.chunks_sent} more ({rep2.chunks_total} total), rollback="
+      f"{rep2.rolled_back_iterations}")
+assert rep2.chunks_reused == partial.chunks_sent
+assert rep2.rolled_back_iterations == 0
+
+post = cluster.run(5)
+assert all(np.isfinite(l) for l in post)
+print(f"trained 5 more steps after double failure, loss {post[-1]:.4f} — OK")

@@ -52,6 +52,37 @@ def load_meta(path: Path) -> Optional[Dict]:
     return json.loads(p.read_text()) if p.exists() else None
 
 
+# ---------------- chunk manifests (StateStream integrity) ---------------- #
+def manifest_path(path: Path) -> Path:
+    return Path(path).with_suffix(".manifest.json")
+
+
+def save_manifest(path: Path, manifest: Dict) -> None:
+    """Persist a ChunkedStream manifest (per-chunk offsets + CRC32s) next to
+    a checkpoint so a partially-fetched restore can verify and resume at
+    chunk granularity."""
+    p = manifest_path(path)
+    p.parent.mkdir(parents=True, exist_ok=True)
+    p.write_text(json.dumps(manifest))
+
+
+def load_manifest(path: Path) -> Optional[Dict]:
+    p = manifest_path(path)
+    return json.loads(p.read_text()) if p.exists() else None
+
+
+def verify_manifest(manifest: Dict, data: bytes) -> list:
+    """Return the seqs of chunks whose CRC does not match `data` (empty list
+    == artifact intact; non-empty == exactly what a resume must re-fetch)."""
+    import zlib
+    bad = []
+    for entry in manifest["chunks"]:
+        lo, hi = entry["offset"], entry["offset"] + entry["nbytes"]
+        if zlib.crc32(data[lo:hi]) != entry["crc"]:
+            bad.append(entry["seq"])
+    return bad
+
+
 class AsyncWriter:
     """Single background thread draining a save queue (bounded, coalescing:
     a newer snapshot for the same tag supersedes a queued older one)."""

@@ -1,0 +1,323 @@
+"""StateStream — unified chunked checkpoint transport (paper §4.2 + §5.3).
+
+Every checkpoint artifact — instant neighbor shards, full async fallbacks,
+lazy backups, recovery fetches — is cut into fixed-size CRC'd quanta
+(`StreamChunk`) and routed through one shared `LinkScheduler` as STATE
+traffic, while the train loop submits its gradient-allreduce volume as TRAIN
+traffic. Preemption, overlap, and the FCR hiding condition then *emerge* from
+the single transport model instead of living in three hand-tuned formulas.
+
+Layers:
+
+  * `ChunkedStream`   — producer: pytree/array -> ordered chunks, per-chunk
+                        CRC32, plus the metadata needed to rebuild the pytree.
+  * `StreamAssembler` — consumer: accepts chunks in any order, verifies CRCs,
+                        dedupes, and reports what is still `missing()` — the
+                        basis of resumable partial transfers.
+  * `StreamTransport` — binds streams to a shared `LinkScheduler`: each chunk
+                        becomes one STATE transfer; finished transfers are
+                        pumped into their assemblers; TRAIN traffic submitted
+                        through the same object preempts every stream.
+"""
+from __future__ import annotations
+
+import math
+import zlib
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.lccl import LinkScheduler, Transfer
+
+PyTree = Any
+DEFAULT_QUANTUM = 1 << 20          # 1 MiB — the paper's chunk granularity
+_SEP = "|"
+
+
+# --------------------------------------------------------------------------- #
+# Chunk format
+# --------------------------------------------------------------------------- #
+@dataclass(frozen=True)
+class StreamChunk:
+    """One transport quantum of a checkpoint artifact."""
+    stream_id: str
+    seq: int                       # chunk index within the stream
+    n_chunks: int
+    offset: int                    # byte offset of payload in the artifact
+    payload: bytes
+    crc: int                       # CRC32 of payload
+    total_bytes: int               # artifact size
+
+    @property
+    def nbytes(self) -> int:
+        return len(self.payload)
+
+    def verify(self) -> bool:
+        return zlib.crc32(self.payload) == self.crc
+
+    def manifest_entry(self) -> Dict[str, int]:
+        return {"seq": self.seq, "offset": self.offset,
+                "nbytes": self.nbytes, "crc": self.crc}
+
+
+def _leaf_records(tree: PyTree) -> List[Tuple[str, np.ndarray]]:
+    import jax
+    out = []
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in path)
+        out.append((key, np.ascontiguousarray(np.asarray(leaf))))
+    return out
+
+
+class ChunkedStream:
+    """A checkpoint artifact cut into CRC'd fixed-size quanta.
+
+    `meta` carries enough layout information (leaf key, dtype, shape, byte
+    offset) to rebuild the original pytree from the reassembled byte blob.
+    """
+
+    def __init__(self, stream_id: str, data: bytes,
+                 meta: Optional[List[Tuple[str, str, Tuple[int, ...], int]]]
+                 = None, quantum: int = DEFAULT_QUANTUM):
+        assert quantum > 0
+        self.stream_id = stream_id
+        self.meta = meta
+        self.quantum = quantum
+        self.total_bytes = len(data)
+        n = max(1, math.ceil(len(data) / quantum))
+        self.chunks: List[StreamChunk] = []
+        for i in range(n):
+            payload = data[i * quantum:(i + 1) * quantum]
+            self.chunks.append(StreamChunk(
+                stream_id, i, n, i * quantum, payload,
+                zlib.crc32(payload), self.total_bytes))
+
+    @property
+    def n_chunks(self) -> int:
+        return len(self.chunks)
+
+    def manifest(self) -> Dict[str, Any]:
+        return {"stream_id": self.stream_id, "n_chunks": self.n_chunks,
+                "total_bytes": self.total_bytes, "quantum": self.quantum,
+                "chunks": [c.manifest_entry() for c in self.chunks]}
+
+    # ------------------------- constructors ------------------------- #
+    @classmethod
+    def from_array(cls, stream_id: str, arr: np.ndarray,
+                   quantum: int = DEFAULT_QUANTUM) -> "ChunkedStream":
+        arr = np.ascontiguousarray(arr)
+        meta = [("", arr.dtype.str, tuple(arr.shape), 0)]
+        return cls(stream_id, arr.tobytes(), meta, quantum)
+
+    @classmethod
+    def from_pytree(cls, stream_id: str, tree: PyTree,
+                    quantum: int = DEFAULT_QUANTUM) -> "ChunkedStream":
+        parts, meta, off = [], [], 0
+        for key, arr in _leaf_records(tree):
+            raw = arr.tobytes()
+            meta.append((key, arr.dtype.str, tuple(arr.shape), off))
+            parts.append(raw)
+            off += len(raw)
+        return cls(stream_id, b"".join(parts), meta, quantum)
+
+
+class StreamAssembler:
+    """Receives chunks (any order, possibly across multiple recovery
+    attempts), verifies per-chunk CRCs, and rebuilds the artifact. Chunks
+    already accepted survive an interrupted transfer — `missing()` is exactly
+    what a resumed transfer still has to move."""
+
+    def __init__(self, stream_id: str, n_chunks: int, total_bytes: int,
+                 meta=None):
+        self.stream_id = stream_id
+        self.n_chunks = n_chunks
+        self.total_bytes = total_bytes
+        self.meta = meta
+        self._parts: Dict[int, StreamChunk] = {}
+        self.rejected = 0              # CRC failures
+
+    @classmethod
+    def for_stream(cls, stream: ChunkedStream) -> "StreamAssembler":
+        return cls(stream.stream_id, stream.n_chunks, stream.total_bytes,
+                   stream.meta)
+
+    def offer(self, chunk: StreamChunk) -> bool:
+        """Accept a chunk; returns True when it was new and CRC-valid."""
+        if chunk.stream_id != self.stream_id:
+            return False
+        if not chunk.verify():
+            self.rejected += 1
+            return False
+        if chunk.seq in self._parts:
+            return False               # duplicate (retransmit): drop
+        self._parts[chunk.seq] = chunk
+        return True
+
+    @property
+    def received(self) -> int:
+        return len(self._parts)
+
+    @property
+    def received_bytes(self) -> int:
+        return sum(c.nbytes for c in self._parts.values())
+
+    def missing(self) -> List[int]:
+        return [i for i in range(self.n_chunks) if i not in self._parts]
+
+    @property
+    def complete(self) -> bool:
+        return not self.missing()
+
+    # ------------------------- reassembly ------------------------- #
+    def data(self) -> bytes:
+        assert self.complete, \
+            f"stream {self.stream_id}: {len(self.missing())} chunks missing"
+        return b"".join(self._parts[i].payload for i in range(self.n_chunks))
+
+    def to_array(self) -> np.ndarray:
+        assert self.meta and len(self.meta) == 1
+        _, dt, shape, _ = self.meta[0]
+        return np.frombuffer(self.data(), dtype=np.dtype(dt)).reshape(shape)
+
+    def to_flat_dict(self) -> Dict[str, np.ndarray]:
+        assert self.meta is not None, "stream carries no pytree metadata"
+        blob = self.data()
+        out = {}
+        for key, dt, shape, off in self.meta:
+            dtype = np.dtype(dt)
+            n = int(np.prod(shape)) if shape else 1
+            arr = np.frombuffer(blob, dtype=dtype, count=n, offset=off)
+            out[key] = arr.reshape(shape)
+        return out
+
+    def to_pytree(self, like: PyTree) -> PyTree:
+        """Rebuild into the structure of `like` (arrays or structs)."""
+        import jax
+        flat = self.to_flat_dict()
+        _, treedef = jax.tree_util.tree_flatten(like)
+        keys = [
+            _SEP.join(str(getattr(k, "key", getattr(k, "idx", k)))
+                      for k in p)
+            for p, _ in jax.tree_util.tree_flatten_with_path(like)[0]]
+        return jax.tree_util.tree_unflatten(treedef,
+                                            [flat[k] for k in keys])
+
+
+# --------------------------------------------------------------------------- #
+# Transport
+# --------------------------------------------------------------------------- #
+@dataclass
+class StreamTicket:
+    """Handle for one (possibly partial) stream submission."""
+    stream_id: str
+    transfers: List[Transfer]
+    chunks: List[StreamChunk]
+    assembler: Optional[StreamAssembler] = None
+    submitted_at: float = 0.0
+
+    @property
+    def complete(self) -> bool:
+        return all(tr.finished for tr in self.transfers)
+
+    @property
+    def finish_time(self) -> Optional[float]:
+        """Link-time instant the last chunk landed (None while in flight)."""
+        if not self.transfers:
+            return self.submitted_at
+        if not self.complete:
+            return None
+        return max(tr.t_finish for tr in self.transfers)
+
+    @property
+    def bytes_moved(self) -> int:
+        return sum(c.nbytes for c in self.chunks)
+
+
+class StreamTransport:
+    """Shared single-link transport. One `LinkScheduler` carries BOTH the
+    train loop's allreduce volume (TRAIN, preempting) and every checkpoint
+    stream (STATE, chunk-granular). Finished STATE transfers are pumped into
+    their stream's assembler, so data delivery and link timing come from the
+    same simulation."""
+
+    def __init__(self, scheduler: LinkScheduler):
+        self.scheduler = scheduler
+        self._pending: List[Tuple[Transfer, StreamChunk,
+                                  Optional[StreamAssembler]]] = []
+        self.streams_sent = 0
+        self.train_bytes_submitted = 0.0
+        self.state_bytes_submitted = 0.0
+        self.chunks_delivered = 0
+
+    # ------------------------- submission ------------------------- #
+    def submit_train(self, nbytes: float, t: float) -> Transfer:
+        self.train_bytes_submitted += nbytes
+        return self.scheduler.submit("TRAIN", nbytes, t)
+
+    def send(self, stream: ChunkedStream, t: float,
+             assembler: Optional[StreamAssembler] = None,
+             seqs: Optional[Sequence[int]] = None) -> StreamTicket:
+        """Submit a stream's chunks as STATE traffic at link-time `t`.
+
+        `seqs` restricts to a subset of chunk indices — used to resume a
+        partial transfer (send only `assembler.missing()`) or to model a
+        transfer interrupted after N chunks."""
+        if seqs is None:
+            seqs = (assembler.missing() if assembler is not None
+                    else range(stream.n_chunks))
+        chunks = [stream.chunks[i] for i in seqs]
+        transfers = []
+        for c in chunks:
+            tr = self.scheduler.submit("STATE", float(c.nbytes), t)
+            transfers.append(tr)
+            self._pending.append((tr, c, assembler))
+            self.state_bytes_submitted += c.nbytes
+        # NOTE: the ticket is returned, not retained — holding every ticket
+        # (and its chunk payloads) for the life of the transport would pin
+        # gigabytes over a long training run
+        self.streams_sent += 1
+        return StreamTicket(stream.stream_id, transfers, chunks, assembler,
+                            submitted_at=t)
+
+    # ------------------------- progress ------------------------- #
+    def pump(self) -> int:
+        """Deliver every finished STATE transfer to its assembler, and prune
+        the scheduler's done-list (a long run finishes millions of chunk
+        transfers; nothing needs them once delivered)."""
+        delivered = 0
+        still = []
+        for tr, chunk, asm in self._pending:
+            if tr.finished:
+                if asm is not None:
+                    asm.offer(chunk)
+                delivered += 1
+            else:
+                still.append((tr, chunk, asm))
+        self._pending = still
+        self.chunks_delivered += delivered
+        if delivered:
+            self.scheduler.done.clear()
+        return delivered
+
+    def run(self, until: float) -> float:
+        busy = self.scheduler.run(until)
+        self.pump()
+        return busy
+
+    def drain(self) -> float:
+        """Run the link until everything has landed; returns the clock."""
+        t = self.scheduler.drain()
+        self.pump()
+        return t
+
+
+def stream_pytree(transport: StreamTransport, stream_id: str, tree: PyTree,
+                  t: float, quantum: int = DEFAULT_QUANTUM
+                  ) -> Tuple[StreamTicket, StreamAssembler]:
+    """Chunk a pytree and put it on the wire; returns (ticket, assembler)."""
+    stream = ChunkedStream.from_pytree(stream_id, tree, quantum)
+    asm = StreamAssembler.for_stream(stream)
+    ticket = transport.send(stream, t, assembler=asm)
+    return ticket, asm

@@ -60,3 +60,32 @@ def sweep(seq_lens: Iterable[int], batches: Iterable[int],
                 for c in flops:
                     out.append(FcrSample(s, b, v, c))
     return out
+
+
+def fcr_hidden_emergent(s: float, b: float, v: float, c: float,
+                        phi: float = 1e9, *, iters: int = 3,
+                        quantum: float = 4 << 20,
+                        train_traffic=()) -> bool:
+    """The FCR hiding condition, EMERGENT from the StateStream transport
+    instead of Eq. 2: drive each iteration's razor checkpoint (12·φ bytes of
+    chunked STATE traffic) through a TRAIN/STATE link scheduler between
+    compute boundaries T_c = 6·s·b·φ/C apart, and report whether every
+    iteration's chunks drained before the next boundary.
+
+    On a dedicated backup link this reduces exactly to `is_free` (FCR >= 1);
+    with `train_traffic` sharing the link — (t, bytes) pairs — hiding demands
+    genuine surplus capacity, which no closed form captures."""
+    from repro.core.lccl import LinkScheduler, submit_chunked
+
+    t_c = 6.0 * s * b * phi / c
+    ckpt_bytes = 12.0 * phi
+    sched = LinkScheduler(v, quantum=min(quantum, max(ckpt_bytes, 1.0)))
+    per_iter: List[List] = []
+    for i in range(iters):
+        per_iter.append(submit_chunked(sched, "STATE", ckpt_bytes, i * t_c))
+    for t, nbytes in train_traffic:
+        sched.submit("TRAIN", nbytes, t)
+    sched.drain()
+    eps = 1e-9 * max(t_c, 1.0)
+    return all(tr.t_finish <= (i + 1) * t_c + eps
+               for i, trs in enumerate(per_iter) for tr in trs)

@@ -119,34 +119,65 @@ class Transfer:
     t_submit: float
     t_start: float = 0.0
     t_finish: float = 0.0
+    finished: bool = False    # set by the scheduler (t_finish can be 0.0)
 
 
 class LinkScheduler:
     """Event-driven single-link model: TRAIN monopolizes the link; STATE runs
     only when no TRAIN transfer is queued or in flight. STATE transfers are
-    preemptible at `quantum` granularity (checkpoint/data chunks)."""
+    preemptible at `quantum` granularity (checkpoint/data chunks): a quantum
+    interrupted by an arriving TRAIN transfer is aborted and retried once the
+    link is idle again.
+
+    The simulation clock (`now`) persists across `run(until=...)` calls, and a
+    partially-transferred STATE item (`_rem`/`_rem_bytes`) is carried over, so
+    a scheduler can be advanced incrementally — e.g. one training iteration at
+    a time — and residual state resumes exactly where it left off."""
 
     def __init__(self, bandwidth: float, quantum: float = 1 << 20):
         self.bw = bandwidth
         self.quantum = quantum
+        self.now = 0.0
         self.done: List[Transfer] = []
         self._train: List[Transfer] = []
         self._state: List[Transfer] = []
+        self._rem: Optional[Transfer] = None   # STATE mid-flight across runs
+        self._rem_bytes = 0.0
+        self._last_finish = 0.0
 
     def submit(self, kind: str, size: float, t: float) -> Transfer:
         tr = Transfer(kind, size, t)
         (self._train if kind == "TRAIN" else self._state).append(tr)
         return tr
 
+    def _finish(self, tr: Transfer) -> None:
+        tr.finished = True
+        self.done.append(tr)
+        self._last_finish = max(self._last_finish, tr.t_finish)
+
+    @property
+    def idle(self) -> bool:
+        return not (self._train or self._state or self._rem is not None)
+
+    def pending_bytes(self, kind: Optional[str] = None) -> float:
+        out = 0.0
+        if kind in (None, "TRAIN"):
+            out += sum(x.size for x in self._train)
+        if kind in (None, "STATE"):
+            out += sum(x.size for x in self._state) + self._rem_bytes
+        return out
+
     def run(self, until: float) -> float:
-        """Simulate to `until`; returns link-busy seconds."""
-        t = 0.0
+        """Simulate from `now` to `until`; returns link-busy seconds. A
+        transfer started before `until` runs to completion (TRAIN is never
+        preempted; a STATE quantum is all-or-nothing), so `now` may end up
+        slightly past `until`."""
+        t = self.now
         busy = 0.0
         pend_t = sorted(self._train, key=lambda x: x.t_submit)
         pend_s = sorted(self._state, key=lambda x: x.t_submit)
-        rem_s: Optional[Transfer] = None
-        rem_bytes = 0.0
-        while t < until and (pend_t or pend_s or rem_s):
+        rem_s, rem_bytes = self._rem, self._rem_bytes
+        while t < until and (pend_t or pend_s or rem_s is not None):
             ready_t = [x for x in pend_t if x.t_submit <= t]
             if ready_t:
                 tr = ready_t[0]
@@ -156,7 +187,7 @@ class LinkScheduler:
                 t = tr.t_start + dt
                 busy += dt
                 tr.t_finish = t
-                self.done.append(tr)
+                self._finish(tr)
                 continue
             # link idle for TRAIN: advance STATE by one quantum
             nxt_t = min((x.t_submit for x in pend_t), default=float("inf"))
@@ -165,17 +196,22 @@ class LinkScheduler:
                 rem_s.t_start = max(t, rem_s.t_submit)
                 rem_bytes = rem_s.size
             if rem_s is not None:
+                if rem_bytes <= 0:          # zero-byte transfer: instant
+                    rem_s.t_finish = t
+                    self._finish(rem_s)
+                    rem_s = None
+                    continue
                 chunk = min(self.quantum, rem_bytes)
                 dt = chunk / self.bw
                 if t + dt > nxt_t:      # TRAIN arrives mid-quantum: yield
-                    t = nxt_t
+                    t = nxt_t           # (aborted quantum is retried later)
                     continue
                 t += dt
                 busy += dt
                 rem_bytes -= chunk
                 if rem_bytes <= 0:
                     rem_s.t_finish = t
-                    self.done.append(rem_s)
+                    self._finish(rem_s)
                     rem_s = None
                 continue
             # nothing runnable: jump to next submission
@@ -185,8 +221,46 @@ class LinkScheduler:
                 break
             t = max(t, nxt)
         self._train = pend_t
-        self._state = ([rem_s] if rem_s else []) + pend_s
+        self._state = pend_s
+        self._rem, self._rem_bytes = rem_s, rem_bytes
+        self.now = max(t, until) if until != float("inf") else t
         return busy
+
+    def drain(self, max_rounds: int = 64) -> float:
+        """Run until every submitted transfer has finished; returns the final
+        clock. Bounded retry loop: preemption-aborted quanta retransmit, so a
+        single analytic horizon can undershoot."""
+        t0 = self.now
+        total = self.pending_bytes()
+        for _ in range(max_rounds):
+            if self.idle:
+                # clamp the clock back to the true completion instant — the
+                # run() horizon above carries slack that should not delay
+                # transfers submitted afterwards
+                self.now = min(self.now, max(self._last_finish, t0))
+                return self.now
+            last_submit = max(
+                [x.t_submit for x in self._train + self._state] +
+                ([self._rem.t_submit] if self._rem is not None else [0.0]))
+            horizon = max(self.now, last_submit) + \
+                self.pending_bytes() / self.bw + 2.0 * total / self.bw + 1.0
+            self.run(until=horizon)
+        raise RuntimeError("LinkScheduler.drain did not converge "
+                           "(TRAIN arrivals denser than one STATE quantum?)")
+
+
+def submit_chunked(sched: LinkScheduler, kind: str, nbytes: float, t: float,
+                   quantum: Optional[float] = None) -> List[Transfer]:
+    """Submit `nbytes` as quantum-sized transfers (last one short); the
+    canonical way recovery/checkpoint volumes enter the scheduler."""
+    q = sched.quantum if quantum is None else quantum
+    n = max(1, int(np.ceil(nbytes / q))) if nbytes > 0 else 1
+    out, left = [], nbytes
+    for _ in range(n):
+        sz = min(q, left)
+        out.append(sched.submit(kind, max(sz, 0.0), t))
+        left -= sz
+    return out
 
 
 def ring_allreduce_time(size_bytes: float, n: int, bandwidth: float,

@@ -9,6 +9,21 @@ from __future__ import annotations
 import jax
 
 
+def make_mesh_compat(shape, axes, devices=None):
+    """jax.make_mesh across jax versions: `axis_types` (and the AxisType
+    enum) only exist on newer releases — pass them when available."""
+    kw = {}
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        kw["axis_types"] = (axis_type.Auto,) * len(axes)
+    if devices is not None:
+        kw["devices"] = devices
+    return jax.make_mesh(shape, axes, **kw)
+
+
+_make_mesh = make_mesh_compat
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     import numpy as np
     shape = (2, 16, 16) if multi_pod else (16, 16)
@@ -20,19 +35,15 @@ def make_production_mesh(*, multi_pod: bool = False):
             f"production mesh needs {n} devices, found {len(devices)} — "
             "run under XLA_FLAGS=--xla_force_host_platform_device_count=512 "
             "(launch/dryrun.py sets this)")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
-        devices=devices)
+    return _make_mesh(shape, axes, devices=devices)
 
 
 def make_host_mesh(data: int = 2, model: int = 2, pod: int = 1):
     """Small mesh over host-platform devices for smoke tests/examples."""
     shape = (pod, data, model) if pod > 1 else (data, model)
     axes = ("pod", "data", "model") if pod > 1 else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return _make_mesh(shape, axes)
 
 
 def make_single_device_mesh():
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return _make_mesh((1, 1), ("data", "model"))

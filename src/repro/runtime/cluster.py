@@ -28,15 +28,20 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.ckpt.engine import CkptEngine, CkptEngineConfig
+from repro.ckpt.stream import (DEFAULT_QUANTUM, ChunkedStream, StreamAssembler,
+                               StreamTransport)
 from repro.configs import ArchConfig
 from repro.core.consistency import reconcile
 from repro.core.controller import StateController
 from repro.core.detection import DetectionTimeline
+from repro.core.lccl import LinkScheduler
 from repro.data.indexer import TidIndexer
 from repro.data.loader import PrefetchingLoader, SyntheticTokens
 from repro.models import build_model
 from repro.optim import AdamWConfig, adamw_update, cast_params, cosine_schedule
+from repro.runtime.failover import FailoverCosts
 from repro.train.state import init_state
+from repro.train.step import step_traffic
 
 PyTree = Any
 
@@ -75,13 +80,17 @@ class Worker:
 
 @dataclass
 class RecoveryReport:
-    kind: str                          # software | hardware | fallback
-    recovered_from: str                # neighbor | full_ckpt
+    kind: str                          # software | hardware | fallback | interrupted
+    recovered_from: str                # neighbor | full_ckpt | neighbor_partial
     resume_iteration: int
     rolled_back_iterations: int
     timeline: Dict[str, float]
     total_time: float
     elastic_dp: Optional[int] = None
+    # StateStream chunk accounting for (partial, resumable) transfers
+    chunks_total: int = 0              # chunks the recovery needs overall
+    chunks_sent: int = 0               # chunks moved in THIS attempt
+    chunks_reused: int = 0             # chunks surviving from a prior attempt
 
 
 class SimCluster:
@@ -90,7 +99,9 @@ class SimCluster:
                  dataset_size: int = 4096,
                  hp: AdamWConfig = AdamWConfig(warmup_steps=2, total_steps=100),
                  ckpt_dir: Path = Path("/tmp/repro_ckpt"),
-                 full_every: int = 50, seed: int = 0):
+                 full_every: int = 50, seed: int = 0,
+                 link_bw: float = 50e9, quantum: int = DEFAULT_QUANTUM,
+                 t_iter_model: float = 0.05):
         self.cfg = cfg
         self.dp = dp
         self.active_dp = dp
@@ -106,16 +117,30 @@ class SimCluster:
         self.source = SyntheticTokens(dataset_size, seq_len, cfg.vocab_size,
                                       seed=seed)
         self.detection = DetectionTimeline()
+        # one link model for the whole cluster: the train loop's allreduce
+        # volume (TRAIN) and every checkpoint artifact (STATE chunks) share it
+        self.quantum = quantum
+        self.t_iter_model = t_iter_model
+        self.sim_time = 0.0
+        self.scheduler = LinkScheduler(link_bw, quantum=quantum)
+        self.transport = StreamTransport(self.scheduler)
+        self.instant_hidden = 0        # instant-ckpt drained within the iter
+        self.instant_exposed = 0       # ... spilled past the boundary
         eng_cfg = CkptEngineConfig(out_dir=Path(ckpt_dir),
-                                   full_every=full_every)
+                                   full_every=full_every, quantum=quantum)
         self.workers = [
             Worker(w,
-                   engine=CkptEngine(dataclasses.replace(eng_cfg), worker_id=w),
+                   engine=CkptEngine(dataclasses.replace(eng_cfg), worker_id=w,
+                                     transport=self.transport),
                    loader=PrefetchingLoader(self.source, self.indexer, w, dp))
             for w in range(dp)
         ]
         self._step = jax.jit(self._make_step())
         self._opt_meta = None
+        self._grad_bytes: Optional[float] = None
+        # partial recovery transfers, keyed (failed_wid, target_iteration)
+        self._pending_recovery: Dict[Tuple[int, int],
+                                     Tuple[ChunkedStream, StreamAssembler]] = {}
         self.loss_history: List[float] = []
 
     # ------------------------------------------------------------------ #
@@ -144,23 +169,35 @@ class SimCluster:
 
     def _shard_and_backup(self) -> None:
         """Instant checkpoint: split unique opt state into dp shards; worker
-        (i+1) stores worker i's shard (the in-step ppermute, host view)."""
+        (i+1) stores worker i's shard (the in-step ppermute, host view) AND
+        streams it as chunked STATE traffic on the shared link."""
         vec, meta = _flatten_opt(self.state["opt"])
         self._opt_meta = meta
         slices = shard_slices(len(vec), self.dp)
         it = self.iteration
-        for i, w in enumerate(self.workers[:self.active_dp]):
-            own = vec[slices[i]].copy()
-            nbr = self.workers[(i + 1) % self.active_dp]
-            w.engine.own.push(it, {"shard": own})
-            if nbr.alive and nbr.host_alive:
-                nbr.engine.neighbor.push(it, {"shard": own})
-                nbr.engine.instant_count += 1
+        active = self.active_dp
+        shards = {i: vec[slices[i]].copy() for i in range(active)}
+        for i, w in enumerate(self.workers[:active]):
+            # predecessor's shard lands in this worker's host RAM
+            nbr_shard = ({"shard": shards[(i - 1) % active]}
+                         if (w.alive and w.host_alive) else None)
+            w.engine.on_step(it, {"shard": shards[i]}, nbr_shard,
+                             t=self.sim_time)
             self.controller.report_ckpt(i, it)
+
+    def _train_wire_bytes(self) -> float:
+        """Per-worker gradient ring-allreduce volume (fp32 master grads)."""
+        if self._grad_bytes is None:
+            self._grad_bytes = float(sum(
+                int(np.prod(l.shape)) * 4
+                for l in jax.tree.leaves(self.state["params"])))
+        return step_traffic(self._grad_bytes, self.active_dp).train_bytes
 
     def step(self) -> float:
         t0 = time.monotonic()
         batch = self._assemble_batch()
+        # the allreduce volume for this step preempts any in-flight STATE
+        self.transport.submit_train(self._train_wire_bytes(), self.sim_time)
         self.state, loss = self._step(self.state, batch)
         jax.block_until_ready(loss)
         self.iteration += 1
@@ -168,9 +205,22 @@ class SimCluster:
         for w in self.workers[:self.active_dp]:
             w.engine.maybe_full_checkpoint(
                 self.iteration, self.state if w.wid == 0 else
-                {"marker": np.zeros(1)})
+                {"marker": np.zeros(1)}, t=self.sim_time)
             self.controller.beat(w.wid)
             w.step_times.append(time.monotonic() - t0)
+        # advance the link model one modeled iteration; instant-ckpt chunks
+        # that drain before the boundary were hidden (the FCR condition,
+        # emergent from the transport instead of Eq. 2)
+        self.sim_time += self.t_iter_model
+        self.transport.run(until=self.sim_time)
+        tickets = [w.engine.last_instant_ticket
+                   for w in self.workers[:self.active_dp]
+                   if w.engine.last_instant_ticket is not None]
+        if tickets:
+            if all(tk.complete for tk in tickets):
+                self.instant_hidden += 1
+            else:
+                self.instant_exposed += 1
         self.loss_history.append(float(loss))
         return float(loss)
 
@@ -200,7 +250,15 @@ class SimCluster:
                 return False
         return True
 
-    def recover(self, *, hardware: bool = False) -> RecoveryReport:
+    def recover(self, *, hardware: bool = False,
+                interrupt_after_chunks: Optional[int] = None
+                ) -> RecoveryReport:
+        """Recover every failed worker.
+
+        `interrupt_after_chunks` models a SECOND failure striking mid-
+        transfer: the recovery stream stops after that many chunks, workers
+        stay down, and the partially-received chunks are retained — the next
+        `recover()` call resumes from them instead of starting over."""
         failed = [w.wid for w in self.workers if not w.alive]
         assert failed, "no failed workers"
         timeline: Dict[str, float] = {}
@@ -208,16 +266,30 @@ class SimCluster:
         timeline["pod_creation"] = 7.0 if hardware else 0.5
         timeline["dependency_install"] = 0.0
 
-        # lazy backup: healthy DP rank 0 persists redundant state (params)
+        # lazy backup: healthy DP rank 0 persists redundant state (params).
+        # It goes on the wire NOW, overlapping the detection/pod-creation
+        # window (§4.2) — recovery chunks only start once pods are up, so
+        # the lazy stream has the link to itself first
         rank0 = self.workers[0]
         if rank0.alive:
             rank0.engine.lazy_backup(self.iteration,
                                      {"params": self.state["params"]},
-                                     is_dp_rank0=True)
+                                     is_dp_rank0=True, t=self.sim_time)
+        t_orch = (timeline["detection"] + timeline["pod_creation"] +
+                  timeline["dependency_install"])
 
         if self._recoverable_from_neighbors(failed):
-            report = self._recover_from_neighbors(failed, timeline, hardware)
+            report = self._recover_from_neighbors(
+                failed, timeline, hardware, interrupt_after_chunks,
+                t_start=self.sim_time + t_orch)
+            if report.kind == "interrupted":
+                return report          # workers stay down; chunks retained
         else:
+            if interrupt_after_chunks is not None:
+                raise ValueError(
+                    "interrupt_after_chunks models a failure mid neighbor-"
+                    "stream; this recovery fell back to the full checkpoint "
+                    "(no resumable chunk transfer to interrupt)")
             report = self._recover_from_full(failed, timeline)
 
         for wid in failed:
@@ -227,7 +299,9 @@ class SimCluster:
             self.workers[wid].loader.repartition(self.active_dp)
         return report
 
-    def _recover_from_neighbors(self, failed, timeline, hardware
+    def _recover_from_neighbors(self, failed, timeline, hardware,
+                                interrupt_after_chunks=None,
+                                t_start: Optional[float] = None
                                 ) -> RecoveryReport:
         # consistency: earliest globally-available version (§4.2)
         versions = {w.wid: w.engine.own.latest().iteration
@@ -237,16 +311,71 @@ class SimCluster:
                     for w in self.workers}
         target = min(versions.values())
         rolled = self.iteration - target
+        # drop partial transfers aimed at a version we no longer want
+        self._pending_recovery = {k: v for k, v in
+                                  self._pending_recovery.items()
+                                  if k[1] == target}
 
+        # ---- move the failed workers' shards as chunked STATE traffic ----
+        t0 = self.sim_time if t_start is None else t_start
+        chunks_total = chunks_sent = chunks_reused = 0
+        tickets, inflight = [], {}
+        budget = interrupt_after_chunks
+        interrupted = False
+        for wid in sorted(failed):
+            holder = self.workers[(wid + 1) % self.dp]
+            key = (wid, target)
+            if key in self._pending_recovery:
+                stream, asm = self._pending_recovery[key]
+                chunks_reused += asm.received
+            else:
+                stream = holder.engine.export_stream(target, which="neighbor")
+                asm = StreamAssembler.for_stream(stream)
+                self._pending_recovery[key] = (stream, asm)
+            chunks_total += stream.n_chunks
+            missing = asm.missing()
+            take = missing
+            if budget is not None:
+                take = missing[:max(budget - chunks_sent, 0)]
+                if len(take) < len(missing):
+                    interrupted = True
+            if take:
+                tickets.append(self.transport.send(stream, t0, assembler=asm,
+                                                   seqs=take))
+                chunks_sent += len(take)
+            inflight[wid] = (stream, asm)
+        self.transport.drain()
+
+        if interrupted:
+            # the second failure struck mid-transfer: time (and the link
+            # clock) advance to where the partial transfer stopped, so the
+            # resumed recovery does NOT re-pay this attempt's transfer time
+            finish = max([tk.finish_time for tk in tickets
+                          if tk.finish_time is not None], default=t0)
+            self.sim_time = max(self.sim_time, finish)
+            timeline["network_and_state"] = finish - t0
+            total = sum(timeline.values())
+            return RecoveryReport("interrupted", "neighbor_partial", target,
+                                  0, timeline, total,
+                                  chunks_total=chunks_total,
+                                  chunks_sent=chunks_sent,
+                                  chunks_reused=chunks_reused)
+
+        # ---- every stream landed: rebuild the optimizer vector ----
         vec, meta = _flatten_opt(self.state["opt"])
         slices = shard_slices(len(vec), self.dp)
         for w in self.workers:
-            snap_keeper = (self.workers[(w.wid + 1) % self.dp].engine.neighbor
-                           if w.wid in failed else w.engine.own)
-            snap = snap_keeper.get(target)
-            assert snap is not None, \
-                f"version {target} missing on worker {w.wid}"
-            vec[slices[w.wid]] = snap.state["shard"]
+            if w.wid in failed:
+                stream, asm = inflight[w.wid]
+                assert asm.complete and asm.rejected == 0, \
+                    f"stream {stream.stream_id} incomplete/corrupt"
+                vec[slices[w.wid]] = asm.to_flat_dict()["shard"]
+                self._pending_recovery.pop((w.wid, target), None)
+            else:
+                snap = w.engine.own.get(target)
+                assert snap is not None, \
+                    f"version {target} missing on worker {w.wid}"
+                vec[slices[w.wid]] = snap.state["shard"]
         new_opt = _unflatten_opt(vec, meta)
         params = jax.tree.map(
             lambda m, p: jnp.asarray(m).astype(p.dtype),
@@ -256,15 +385,22 @@ class SimCluster:
                                                             new_opt)}
         self.iteration = target
 
-        # timeline: network recovery overlaps state loading (§5.2)
+        # timeline: network recovery overlaps state loading (§5.2); the
+        # state leg is the SCHEDULER's finish time for the recovery chunks,
+        # so TRAIN traffic sharing the link delays recovery emergently
         n = self.dp
         t_net = 0.5 + 0.001 * n
-        shard_bytes = vec.nbytes / self.dp
-        t_state = shard_bytes / 50e9 + 0.2
+        finish = max([tk.finish_time for tk in tickets if tk.finish_time
+                      is not None], default=t0)
+        self.sim_time = max(self.sim_time, finish)
+        t_state = (finish - t0) + 0.2
         timeline["network_and_state"] = max(t_net, t_state)
         total = sum(timeline.values())
         return RecoveryReport("hardware" if hardware else "software",
-                              "neighbor", target, rolled, timeline, total)
+                              "neighbor", target, rolled, timeline, total,
+                              chunks_total=chunks_total,
+                              chunks_sent=chunks_sent,
+                              chunks_reused=chunks_reused)
 
     def _recover_from_full(self, failed, timeline) -> RecoveryReport:
         eng0 = self.workers[0].engine
@@ -273,16 +409,36 @@ class SimCluster:
         assert it is not None, "no full checkpoint available (insurance gap)"
         like = jax.tree.map(lambda x: np.asarray(x), self.state)
         restored = eng0.restore_full(it, like)
+
+        # integrity: re-chunk the restored artifact and check it against the
+        # per-chunk CRC manifest written at save time
+        from repro.ckpt.storage import load_manifest, verify_manifest
+        manifest = load_manifest(eng0._full_path(it))
+        chunks_total = 0
+        if manifest is not None:
+            stream = ChunkedStream.from_pytree(
+                manifest["stream_id"], restored,
+                quantum=int(manifest.get("quantum", self.quantum)))
+            blob = b"".join(c.payload for c in stream.chunks)
+            bad = verify_manifest(manifest, blob)
+            assert not bad, f"full ckpt it{it}: corrupt chunks {bad}"
+            chunks_total = stream.n_chunks
+
         self.state = jax.tree.map(jnp.asarray, restored)
         rolled = self.iteration - it
         self.iteration = it
         full_bytes = sum(np.asarray(l).nbytes
                          for l in jax.tree.leaves(restored))
-        timeline["network_and_state"] = max(0.5 + 0.001 * self.dp,
-                                            full_bytes / 1e9 + 1.0)
+        # serial reload from storage, still through the link model
+        from repro.runtime.failover import schedule_state_phase
+        t_state = 1.0 + schedule_state_phase(full_bytes,
+                                             FailoverCosts().storage_bw,
+                                             quantum=max(full_bytes, 1.0))
+        timeline["network_and_state"] = max(0.5 + 0.001 * self.dp, t_state)
         total = sum(timeline.values())
         return RecoveryReport("fallback", "full_ckpt", it, rolled,
-                              timeline, total)
+                              timeline, total, chunks_total=chunks_total,
+                              chunks_sent=chunks_total)
 
     # ------------------------------------------------------------------ #
     # Elastic rescale (no spare capacity): shrink DP, repartition data

@@ -154,3 +154,34 @@ def _mask(tree: PyTree, mask_pspecs: PyTree) -> PyTree:
     is_p = lambda x: isinstance(x, P) or x is None
     return jax.tree.map(lambda ps, x: None if ps is None else x,
                         mask_pspecs, tree, is_leaf=is_p)
+
+
+# --------------------------------------------------------------------------- #
+# Link-traffic accounting (paper §5.3): what one training iteration puts on
+# the wire, per worker. The runtime submits `train_bytes` as TRAIN traffic to
+# the shared StateStream scheduler — the volume that preempts checkpoint
+# chunks — while the instant-ckpt shard rides the same link as STATE.
+# --------------------------------------------------------------------------- #
+@dataclass(frozen=True)
+class TrafficProfile:
+    train_bytes: float   # gradient ring-allreduce wire volume (preempting)
+    state_bytes: float   # razor-unique instant-ckpt shard, one DP-ring hop
+
+
+def step_traffic(grad_bytes: float, dp: int,
+                 razor: Optional[RazorPlan] = None,
+                 state_bytes: Optional[float] = None) -> TrafficProfile:
+    """Per-iteration wire volumes for one worker. Ring allreduce moves
+    2(dp-1)/dp of the gradient bytes; the instant checkpoint moves the
+    razor-unique optimizer shard one hop along the DP ring."""
+    wire = 2.0 * (dp - 1) / dp * grad_bytes if dp > 1 else 0.0
+    if state_bytes is None:
+        state_bytes = float(razor.unique_bytes_per_device_ring) if razor \
+            else 0.0
+    return TrafficProfile(wire, state_bytes)
+
+
+def artifacts_traffic(artifacts: StepArtifacts, grad_bytes: float, dp: int
+                      ) -> TrafficProfile:
+    """TrafficProfile for a built train step (razor plan already resolved)."""
+    return step_traffic(grad_bytes, dp, razor=artifacts.razor)

@@ -3,6 +3,11 @@ import math
 
 import numpy as np
 import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="hypothesis not installed — property tests skipped (declared in "
+           "pyproject [dev]; tier-1 degrades gracefully without it)")
 from hypothesis import given, settings
 from hypothesis import strategies as st
 

@@ -7,6 +7,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow    # one jit compile per arch, ~2 min total
+
 from repro.configs import ASSIGNED, PAPER_WORKLOADS, get_arch, reduce_for_smoke
 from repro.models import build_model
 

@@ -7,6 +7,8 @@ import textwrap
 
 import pytest
 
+pytestmark = pytest.mark.slow    # subprocess 8-virtual-device SPMD runs
+
 
 def _run(script: str, timeout: int = 560) -> str:
     env = {"XLA_FLAGS": "--xla_force_host_platform_device_count=8",
@@ -27,8 +29,8 @@ def test_neighbor_backup_is_ring_permute():
     from jax.sharding import PartitionSpec as P, NamedSharding
     from repro.core.instant import neighbor_backup
 
-    mesh = jax.make_mesh((4, 2), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import make_mesh_compat
+    mesh = make_mesh_compat((4, 2), ("data", "model"))
     x = jnp.arange(8, dtype=jnp.float32).reshape(4, 2)  # row r on data-rank r
     xs = jax.device_put(x, NamedSharding(mesh, P("data", "model")))
 
@@ -51,8 +53,8 @@ def test_razor_plan_on_mesh():
     from repro.core.razor import razor_plan
     from repro.train.state import make_state_plan
 
-    mesh = jax.make_mesh((4, 2), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import make_mesh_compat
+    mesh = make_mesh_compat((4, 2), ("data", "model"))
     cfg = reduce_for_smoke(get_arch("llama3-8b"))
     model = build_model(cfg)
     plan = make_state_plan(model, mesh)
@@ -79,8 +81,8 @@ def test_train_step_backup_roundtrip():
     from repro.train.state import init_state
     from repro.train.step import build_train_step
 
-    mesh = jax.make_mesh((4, 2), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import make_mesh_compat
+    mesh = make_mesh_compat((4, 2), ("data", "model"))
     cfg = dataclasses.replace(reduce_for_smoke(get_arch("qwen3-0.6b")),
                               dtype="float32")
     model = build_model(cfg)
@@ -141,8 +143,8 @@ def test_cross_pod_compression_close_to_exact():
     from repro.train.state import init_state
     from repro.train.step import build_train_step
 
-    mesh = jax.make_mesh((2, 4, 1), ("pod", "data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 3)
+    from repro.launch.mesh import make_mesh_compat
+    mesh = make_mesh_compat((2, 4, 1), ("pod", "data", "model"))
     cfg = dataclasses.replace(reduce_for_smoke(get_arch("gemma-2b")),
                               dtype="float32")
     model = build_model(cfg)
@@ -178,8 +180,8 @@ def test_small_mesh_dryrun_all_families():
     from repro.train.state import make_state_specs
     from repro.train.serve import build_decode_step
 
-    mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 3)
+    from repro.launch.mesh import make_mesh_compat
+    mesh = make_mesh_compat((2, 2, 2), ("pod", "data", "model"))
     for arch in ("deepseek-67b", "qwen3-moe-30b-a3b", "mamba2-2.7b",
                  "zamba2-7b", "whisper-small", "internvl2-26b"):
         cfg = reduce_for_smoke(get_arch(arch))

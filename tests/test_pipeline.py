@@ -4,6 +4,10 @@ import subprocess
 import sys
 import textwrap
 
+import pytest
+
+pytestmark = pytest.mark.slow    # subprocess virtual-device run
+
 
 def test_pipeline_matches_sequential():
     env_script = """
@@ -12,8 +16,8 @@ def test_pipeline_matches_sequential():
     from jax.sharding import PartitionSpec as P
     from repro.parallel.pipeline import bubble_fraction, pipeline_forward
 
-    mesh = jax.make_mesh((4,), ("pipe",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.launch.mesh import make_mesh_compat
+    mesh = make_mesh_compat((4,), ("pipe",))
     L, D, M, MB, S = 8, 16, 6, 2, 4
     rng = np.random.default_rng(0)
     params = {"w": jnp.asarray(rng.normal(size=(L, D, D)) * 0.3, jnp.float32)}

@@ -5,6 +5,8 @@ import sys
 
 import pytest
 
+pytestmark = pytest.mark.slow    # subprocess end-to-end runs, minutes each
+
 
 def _run(cmd, timeout=560):
     import os
