@@ -1,11 +1,56 @@
 """Shared benchmark utilities. Every table prints `name,us_per_call,derived`
 CSV rows (us_per_call = wall-time of the measured operation where one exists,
-0 for purely analytic rows; derived = the table's headline quantity)."""
+0 for purely analytic rows; derived = the table's headline quantity).
+
+Rows are also collected in memory so a driver can dump them as JSON
+(`dump_rows`) — the CI benchmark smoke job uploads these as build artifacts,
+accumulating the perf trajectory across commits (`BENCH_*.json`)."""
+import json
 import time
+from pathlib import Path
+from typing import List
+
+_ROWS: List[dict] = []
 
 
 def row(name: str, us_per_call: float, derived) -> None:
     print(f"{name},{us_per_call:.3f},{derived}")
+    _ROWS.append({"name": name, "us_per_call": round(us_per_call, 3),
+                  "derived": derived if isinstance(derived, (int, float))
+                  else str(derived)})
+
+
+def reset_rows() -> None:
+    _ROWS.clear()
+
+
+def dump_rows(path) -> Path:
+    """Write every row collected since the last reset as a JSON artifact."""
+    path = Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(json.dumps(_ROWS, indent=1))
+    return path
+
+
+def bench_main(run_fn) -> None:
+    """Uniform CLI for single-table benchmark modules: optional `--json OUT`
+    artifact dump and a `--tiny` smoke mode (CI) that `run_fn` may honor via
+    its `tiny` keyword."""
+    import argparse
+    import inspect
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default=None, metavar="OUT",
+                    help="also dump the rows as a JSON artifact")
+    ap.add_argument("--tiny", action="store_true",
+                    help="smoke-scale run (CI benchmark job)")
+    args = ap.parse_args()
+    kw = {}
+    if "tiny" in inspect.signature(run_fn).parameters:
+        kw["tiny"] = args.tiny
+    run_fn(**kw)
+    if args.json:
+        print(f"wrote {dump_rows(args.json)}")
 
 
 def timeit(fn, *args, repeat: int = 5, **kw) -> float:

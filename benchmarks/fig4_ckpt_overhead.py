@@ -17,7 +17,7 @@ from repro.core.analytic import ckpt_time_full
 from repro.models import param_count
 
 
-def _measured(tmp: Path) -> None:
+def _measured(tmp: Path, tiny: bool = False) -> None:
     # NOTE: the with-ckpt arm now includes the StateStream bookkeeping the
     # simulator does in-process (shard serialization + per-chunk CRC32), so
     # overhead_frac upper-bounds the paper's razor+ring-copy cost; on real
@@ -31,11 +31,12 @@ def _measured(tmp: Path) -> None:
                          ckpt_dir=tmp / f"c{with_ckpt}", full_every=10**9)
         if not with_ckpt:
             clu._shard_and_backup = lambda: None  # disable instant ckpt
-        clu.run(3)  # warmup + compile
+        warm, meas = (1, 2) if tiny else (3, 5)
+        clu.run(warm)  # warmup + compile
         import time
         t0 = time.perf_counter()
-        clu.run(5)
-        dt = (time.perf_counter() - t0) / 5 * 1e6
+        clu.run(meas)
+        dt = (time.perf_counter() - t0) / meas * 1e6
         (inst if with_ckpt else base).append(dt)
     row("fig4/measured/per_iter_no_ckpt_us", base[0], "")
     row("fig4/measured/per_iter_instant_ckpt_us", inst[0], "")
@@ -96,10 +97,11 @@ def _fftrainer_transport_overhead(phi: float, dp: int, t_iter: float,
     return max(finish - n_iters * t_iter, 0.0) / (n_iters * t_iter)
 
 
-def run(tmp: Path = Path("/tmp/repro_bench_fig4")) -> None:
-    _measured(tmp)
+def run(tmp: Path = Path("/tmp/repro_bench_fig4"), tiny: bool = False) -> None:
+    _measured(tmp, tiny=tiny)
     _modeled()
 
 
 if __name__ == "__main__":
-    run()
+    from benchmarks.common import bench_main
+    bench_main(run)

@@ -57,18 +57,27 @@ class CkptEngine:
 
     # ---------------- chunk-stream plumbing ---------------- #
     def _stream(self, stream_id: str, tree: PyTree, t: float,
-                stream: Optional[ChunkedStream] = None
-                ) -> Optional[StreamTicket]:
+                stream: Optional[ChunkedStream] = None,
+                route: str = "any") -> Optional[StreamTicket]:
         """Cut `tree` into CRC'd quanta (or take a prebuilt stream) and put
-        it on the shared link as STATE traffic. No-op (returns None) when no
-        transport is attached."""
+        it on the transport as STATE traffic. No-op (returns None) when no
+        transport is attached.
+
+        `route` picks the edge path on a per-link transport: "instant" rides
+        the adjacent DP-ring edge (predecessor -> this worker); "any" (full
+        and lazy artifacts) lets the transport pick the least-loaded live
+        edge. A single-link transport ignores routing."""
         if self.transport is None:
             return None
         if stream is None:
             stream = ChunkedStream.from_pytree(stream_id, tree,
                                                quantum=self.cfg.quantum)
         asm = StreamAssembler.for_stream(stream)
-        ticket = self.transport.send(stream, t, assembler=asm)
+        src = dst = None
+        if route == "instant":
+            src, dst = self.transport.instant_route(self.worker_id)
+        ticket = self.transport.send(stream, t, assembler=asm, src=src,
+                                     dst=dst)
         self.streamed_chunks += stream.n_chunks
         self.streamed_bytes += stream.total_bytes
         return ticket
@@ -97,12 +106,16 @@ class CkptEngine:
         """Called each iteration with this worker's unique shard and the
         permuted shard received from the DP-ring predecessor."""
         self.own.push(iteration, own_unique)
-        if neighbor_backup is not None:
+        if neighbor_backup is None:
+            # no instant stream this step: a stale ticket must not be
+            # re-counted into the hidden/exposed books
+            self.last_instant_ticket = None
+        else:
             self.neighbor.push(iteration, neighbor_backup)
             self.instant_count += 1
             self.last_instant_ticket = self._stream(
                 f"instant/it{iteration:08d}/w{self.worker_id:05d}",
-                neighbor_backup, t)
+                neighbor_backup, t, route="instant")
 
     def newest_version(self) -> int:
         return self.own.latest().iteration if self.own.latest() else -1

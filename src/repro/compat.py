@@ -1,0 +1,34 @@
+"""Cross-version jax shims.
+
+The repo targets the `jax.shard_map` / `jax.sharding.AxisType` era but must
+also run on the 0.4.37 floor, where `shard_map` lives in
+`jax.experimental.shard_map` with the older `check_rep`/`auto` spelling.
+`launch/mesh.py:make_mesh_compat` handles the mesh side; this module holds
+the rest.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Set
+
+import jax
+
+
+def shard_map_compat(f, mesh, in_specs, out_specs, *,
+                     axis_names: Optional[Set[Any]] = None,
+                     check: bool = False):
+    """`jax.shard_map` across jax versions.
+
+    `axis_names` (new spelling) marks the axes that are manual inside `f`;
+    on old jax it is translated to the complementary `auto` set. `check`
+    maps to `check_vma` (new) / `check_rep` (old)."""
+    if hasattr(jax, "shard_map"):
+        kw = {"check_vma": check}
+        if axis_names is not None:
+            kw["axis_names"] = set(axis_names)
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, **kw)
+    from jax.experimental.shard_map import shard_map
+    kw = {"check_rep": check}
+    if axis_names is not None:
+        kw["auto"] = frozenset(mesh.axis_names) - set(axis_names)
+    return shard_map(f, mesh, in_specs=in_specs, out_specs=out_specs, **kw)

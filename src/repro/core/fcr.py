@@ -62,6 +62,31 @@ def sweep(seq_lens: Iterable[int], batches: Iterable[int],
     return out
 
 
+def fcr_hidden_per_edge(topology, s: float, b: float, c: float,
+                        phi: float = 1e9, *, iters: int = 3,
+                        quantum: float = 4 << 20,
+                        train_traffic=(),
+                        edge_train_traffic=None) -> dict:
+    """Per-edge FCR hiding over a `LinkTopology` ring: every edge carries its
+    neighbor-shard STATE chunks at that edge's OWN bandwidth, plus the
+    ring-allreduce TRAIN volume every edge sees (`train_traffic`, (t, bytes)
+    pairs) and any `edge_train_traffic[{edge}]` extras. Returns
+    {edge: hidden?}.
+
+    On a dedicated ring (no TRAIN traffic) each edge's verdict reduces
+    exactly to the closed form `is_free(s, b, v_edge, c)` — Eq. 2, but now a
+    hotspot or asymmetric edge fails hiding on precisely that edge while the
+    rest of the ring stays free."""
+    extra = edge_train_traffic or {}
+    out = {}
+    for e in topology.edges():
+        v_edge = topology.edge(*e).bw
+        traffic = list(train_traffic) + list(extra.get(e, ()))
+        out[e] = fcr_hidden_emergent(s, b, v_edge, c, phi, iters=iters,
+                                     quantum=quantum, train_traffic=traffic)
+    return out
+
+
 def fcr_hidden_emergent(s: float, b: float, v: float, c: float,
                         phi: float = 1e9, *, iters: int = 3,
                         quantum: float = 4 << 20,

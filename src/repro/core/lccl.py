@@ -24,7 +24,7 @@ from __future__ import annotations
 import threading
 import time
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -139,6 +139,7 @@ class LinkScheduler:
         self.quantum = quantum
         self.now = 0.0
         self.done: List[Transfer] = []
+        self.n_finished = 0            # survives done-list pruning
         self._train: List[Transfer] = []
         self._state: List[Transfer] = []
         self._rem: Optional[Transfer] = None   # STATE mid-flight across runs
@@ -153,6 +154,7 @@ class LinkScheduler:
     def _finish(self, tr: Transfer) -> None:
         tr.finished = True
         self.done.append(tr)
+        self.n_finished += 1
         self._last_finish = max(self._last_finish, tr.t_finish)
 
     @property
@@ -247,6 +249,258 @@ class LinkScheduler:
             self.run(until=horizon)
         raise RuntimeError("LinkScheduler.drain did not converge "
                            "(TRAIN arrivals denser than one STATE quantum?)")
+
+
+# --------------------------------------------------------------------------- #
+# Per-link topology: one LinkScheduler per edge (ISSUE 2 tentpole)
+# --------------------------------------------------------------------------- #
+Edge = Tuple[int, int]
+
+
+def edge_key(u: int, v: int) -> Edge:
+    """Canonical (undirected) edge identity."""
+    return (u, v) if u <= v else (v, u)
+
+
+@dataclass
+class PathTransfer:
+    """One item moving hop-by-hop (store-and-forward) along an edge path.
+
+    Duck-types the `Transfer` surface that `StreamTicket` consumes
+    (`finished`, `t_finish`, `t_submit`), so transport tickets work unchanged
+    whether a chunk crossed one edge or rode a multi-hop recovery path."""
+    kind: str
+    size: float
+    t_submit: float
+    path: Tuple[Edge, ...]
+    hop: int = 0                       # index of the edge currently in flight
+    transfer: Optional[Transfer] = None
+    finished: bool = False
+    t_finish: float = 0.0
+
+    @property
+    def edge(self) -> Optional[Edge]:
+        return self.path[self.hop] if self.hop < len(self.path) else None
+
+
+class LinkTopology:
+    """A graph of per-edge `LinkScheduler`s replacing the PR-1 global link.
+
+    * ``kind="ring"``: edge (i, i+1 mod n) for every i — the DP-ring fabric
+      the paper's neighbor shards and allreduce actually use.
+    * ``kind="full"``: every pair — an idealized fully-connected fabric.
+
+    Each edge is an independent TRAIN/STATE two-queue scheduler, so
+    contention is per-edge instead of uniformly smeared: a saturated hotspot
+    edge delays only the streams routed across it. A failed node's incident
+    edges go dark (``fail_node``) and ``path`` routes around them; individual
+    edges can also be failed (``fail_edge``) to force multi-hop detours.
+
+    Multi-hop items move store-and-forward: a chunk fully crosses one edge,
+    then is submitted on the next at its arrival time (``_pump``). Within a
+    single ``run(until=...)`` window a chunk advances at most one hop (each
+    edge clock is already clamped to ``until``); ``drain()`` loops rounds
+    with growing horizons, so drained timings are exact."""
+
+    def __init__(self, n: int, bandwidth: float, quantum: float = 1 << 20,
+                 kind: str = "ring",
+                 edge_bw: Optional[Dict[Edge, float]] = None):
+        assert kind in ("ring", "full"), kind
+        assert n >= 1
+        self.n = n
+        self.kind = kind
+        self.default_bw = bandwidth
+        self.quantum = quantum
+        if kind == "ring":
+            edges = {edge_key(i, (i + 1) % n) for i in range(n)} if n > 1 \
+                else set()
+        else:
+            edges = {(i, j) for i in range(n) for j in range(i + 1, n)}
+        bw = dict(edge_bw or {})
+        self.links: Dict[Edge, LinkScheduler] = {
+            e: LinkScheduler(bw.get(e, bandwidth), quantum=quantum)
+            for e in sorted(edges)}
+        self.dark_nodes: set = set()
+        self.dark_edges: set = set()
+        self._forwarding: List[PathTransfer] = []
+
+    # ------------------------- graph queries ------------------------- #
+    def edges(self) -> List[Edge]:
+        return list(self.links)
+
+    def edge(self, u: int, v: int) -> LinkScheduler:
+        return self.links[edge_key(u, v)]
+
+    def set_bandwidth(self, u: int, v: int, bandwidth: float) -> None:
+        self.links[edge_key(u, v)].bw = bandwidth
+
+    def edge_up(self, u: int, v: int) -> bool:
+        e = edge_key(u, v)
+        return (e in self.links and e not in self.dark_edges
+                and u not in self.dark_nodes and v not in self.dark_nodes)
+
+    def live_edges(self) -> List[Edge]:
+        return [e for e in self.links if self.edge_up(*e)]
+
+    def neighbors(self, u: int) -> List[int]:
+        out = []
+        for a, b in self.links:
+            if a == u and self.edge_up(a, b):
+                out.append(b)
+            elif b == u and self.edge_up(a, b):
+                out.append(a)
+        return sorted(out)
+
+    # ------------------------- failure state ------------------------- #
+    def fail_node(self, wid: int) -> None:
+        self.dark_nodes.add(wid)
+
+    def restore_node(self, wid: int) -> None:
+        self.dark_nodes.discard(wid)
+
+    def fail_edge(self, u: int, v: int) -> None:
+        self.dark_edges.add(edge_key(u, v))
+
+    def restore_edge(self, u: int, v: int) -> None:
+        self.dark_edges.discard(edge_key(u, v))
+
+    # ------------------------- routing ------------------------- #
+    def path(self, src: int, dst: int) -> List[Edge]:
+        """Shortest live path src -> dst (BFS), as a list of edges. The
+        endpoints are assumed up (a recovering node's pod is created before
+        its state streams); intermediate dark nodes/edges are routed around."""
+        if src == dst:
+            return []
+        prev: Dict[int, int] = {src: src}
+        frontier = [src]
+        while frontier and dst not in prev:
+            nxt = []
+            for u in frontier:
+                for a, b in self.links:
+                    if edge_key(a, b) in self.dark_edges:
+                        continue
+                    for x, y in ((a, b), (b, a)):
+                        if x != u or y in prev:
+                            continue
+                        # intermediate nodes must be live; dst itself is
+                        # allowed (its pod is up by the time state moves)
+                        if y != dst and y in self.dark_nodes:
+                            continue
+                        if u != src and u in self.dark_nodes:
+                            continue
+                        prev[y] = u
+                        nxt.append(y)
+            frontier = nxt
+        if dst not in prev:
+            raise RuntimeError(
+                f"no live path {src} -> {dst} "
+                f"(dark nodes {sorted(self.dark_nodes)}, "
+                f"dark edges {sorted(self.dark_edges)})")
+        hops = []
+        node = dst
+        while node != src:
+            hops.append(edge_key(prev[node], node))
+            node = prev[node]
+        return hops[::-1]
+
+    def least_loaded_edge(self, kind: Optional[str] = None) -> Edge:
+        """The live edge with the least queued bytes — where full/lazy
+        checkpoint streams go so they stay off busy training edges."""
+        live = self.live_edges()
+        if not live:
+            raise RuntimeError("no live edges in the topology")
+        return min(live, key=lambda e: (self.links[e].pending_bytes(kind), e))
+
+    # ------------------------- submission ------------------------- #
+    def submit_path(self, kind: str, size: float, t: float,
+                    path: Sequence[Edge]) -> PathTransfer:
+        """Put one item on an edge path. Empty path = local delivery."""
+        pt = PathTransfer(kind, size, t, tuple(edge_key(*e) for e in path))
+        if not pt.path:
+            pt.finished = True
+            pt.t_finish = t
+            return pt
+        pt.transfer = self.links[pt.path[0]].submit(kind, size, t)
+        self._forwarding.append(pt)
+        return pt
+
+    def submit_train_edge(self, u: int, v: int, nbytes: float, t: float
+                          ) -> Transfer:
+        return self.edge(u, v).submit("TRAIN", nbytes, t)
+
+    def submit_train_ring(self, nbytes_per_edge: float, t: float
+                          ) -> List[Transfer]:
+        """One step's ring-allreduce volume, edge by edge: every live edge
+        carries 2(n-1)/n of the gradient bytes (`step_traffic`), so TRAIN
+        preemption is per-edge instead of smeared over a global link."""
+        return [sch.submit("TRAIN", nbytes_per_edge, t)
+                for e, sch in self.links.items() if self.edge_up(*e)]
+
+    # ------------------------- simulation ------------------------- #
+    def _pump(self) -> int:
+        """Advance store-and-forward: items whose current leg landed are
+        submitted on their next edge at the arrival time (or delivered)."""
+        progressed = 0
+        still = []
+        for pt in self._forwarding:
+            if pt.transfer is not None and pt.transfer.finished:
+                progressed += 1
+                pt.hop += 1
+                if pt.hop < len(pt.path):
+                    pt.transfer = self.links[pt.path[pt.hop]].submit(
+                        pt.kind, pt.size, pt.transfer.t_finish)
+                    still.append(pt)
+                else:
+                    pt.finished = True
+                    pt.t_finish = pt.transfer.t_finish
+            else:
+                still.append(pt)
+        self._forwarding = still
+        return progressed
+
+    @property
+    def idle(self) -> bool:
+        return not self._forwarding and \
+            all(sch.idle for sch in self.links.values())
+
+    def pending_bytes(self, kind: Optional[str] = None) -> float:
+        return sum(sch.pending_bytes(kind) for sch in self.links.values())
+
+    @property
+    def clock(self) -> float:
+        return max((sch.now for sch in self.links.values()), default=0.0)
+
+    def run(self, until: float) -> float:
+        busy = sum(sch.run(until) for sch in self.links.values())
+        self._pump()
+        return busy
+
+    def drain(self, max_rounds: int = 64) -> float:
+        """Run every edge until all transfers (and forwarded hops) land."""
+        for _ in range(max_rounds):
+            for sch in self.links.values():
+                if not sch.idle:
+                    sch.drain()
+            self._pump()
+            if self.idle:
+                return self.clock
+        raise RuntimeError("LinkTopology.drain did not converge")
+
+
+def submit_chunked_path(topo: LinkTopology, kind: str, nbytes: float,
+                        t: float, path: Sequence[Edge],
+                        quantum: Optional[float] = None) -> List[PathTransfer]:
+    """Submit `nbytes` as quantum-sized items along an edge path — the
+    per-link analogue of `submit_chunked` (recovery fetches, modeled
+    checkpoint volumes)."""
+    q = topo.quantum if quantum is None else quantum
+    n = max(1, int(np.ceil(nbytes / q))) if nbytes > 0 else 1
+    out, left = [], nbytes
+    for _ in range(n):
+        sz = min(q, left)
+        out.append(topo.submit_path(kind, max(sz, 0.0), t, path))
+        left -= sz
+    return out
 
 
 def submit_chunked(sched: LinkScheduler, kind: str, nbytes: float, t: float,

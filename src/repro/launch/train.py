@@ -30,9 +30,19 @@ def main() -> None:
     ap.add_argument("--hardware-failure", action="store_true")
     ap.add_argument("--ckpt-dir", default="/tmp/repro_train_ckpt")
     ap.add_argument("--full-every", type=int, default=500)
+    ap.add_argument("--topology", choices=("ring", "full"), default="ring",
+                    help="per-link fabric shape (one scheduler per edge)")
+    ap.add_argument("--link-bw", type=float, default=50e9,
+                    help="default per-edge bandwidth, bytes/s")
+    ap.add_argument("--hotspot-edge", type=int, nargs=2, default=None,
+                    metavar=("U", "V"),
+                    help="ring edge to throttle (asymmetric-bandwidth run)")
+    ap.add_argument("--hotspot-bw", type=float, default=5e9,
+                    help="bandwidth of the hotspot edge, bytes/s")
     args = ap.parse_args()
 
     from repro.configs import get_arch, reduce_for_smoke
+    from repro.core.lccl import edge_key
     from repro.optim import AdamWConfig
     from repro.runtime.cluster import SimCluster
 
@@ -41,10 +51,15 @@ def main() -> None:
         cfg = reduce_for_smoke(cfg)
     cfg = dataclasses.replace(cfg, remat_policy="none")
 
+    edge_bw = None
+    if args.hotspot_edge is not None:
+        edge_bw = {edge_key(*args.hotspot_edge): args.hotspot_bw}
+
     clu = SimCluster(
         cfg, dp=args.dp, global_batch=args.global_batch,
         seq_len=args.seq_len, ckpt_dir=Path(args.ckpt_dir),
-        full_every=args.full_every,
+        full_every=args.full_every, link_bw=args.link_bw,
+        topology=args.topology, edge_bw=edge_bw,
         hp=AdamWConfig(warmup_steps=5, total_steps=max(args.steps, 10)))
 
     t0 = time.time()
@@ -62,6 +77,17 @@ def main() -> None:
                   f"({(time.time() - t0) / (step + 1):.2f}s/it)")
     print(f"done: {clu.iteration} iterations, "
           f"instant ckpts per worker ~= {clu.workers[0].engine.instant_count}")
+    # per-edge view of the fabric the training traffic actually loaded:
+    # instant-ckpt hiding (the FCR condition) is now observable edge by edge
+    print(f"instant ckpt hidden/exposed iterations: "
+          f"{clu.instant_hidden}/{clu.instant_exposed}")
+    for e, sch in sorted(clu.topology.links.items()):
+        hid = clu.edge_instant_hidden.get(e, 0)
+        exp = clu.edge_instant_exposed.get(e, 0)
+        print(f"  edge {e[0]}-{e[1]}: bw {sch.bw / 1e9:.1f} GB/s, "
+              f"state hidden {hid} exposed {exp}, "
+              f"TRAIN+STATE transfers {sch.n_finished} pending "
+              f"{sch.pending_bytes() / 1e6:.1f} MB")
 
 
 if __name__ == "__main__":

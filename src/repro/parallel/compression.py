@@ -22,6 +22,8 @@ import jax.numpy as jnp
 from jax.sharding import Mesh
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map_compat
+
 PyTree = Any
 
 
@@ -77,13 +79,12 @@ def pod_compressed_value_and_grad(
                             is_leaf=is_p)
     batch_in = jax.tree.map(lambda s: _keep_only_axis(s, axis), batch_pspecs,
                             is_leaf=is_p)
-    return jax.shard_map(
-        local, mesh=mesh,
+    return shard_map_compat(
+        local, mesh,
         in_specs=(param_in, batch_in),
         out_specs=((P(), jax.tree.map(lambda _: P(), {"xent": 0, "aux": 0})),
                    param_in),
         axis_names={axis},
-        check_vma=False,
     )
 
 

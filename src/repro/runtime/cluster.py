@@ -29,19 +29,19 @@ import numpy as np
 
 from repro.ckpt.engine import CkptEngine, CkptEngineConfig
 from repro.ckpt.stream import (DEFAULT_QUANTUM, ChunkedStream, StreamAssembler,
-                               StreamTransport)
+                               TopologyTransport)
 from repro.configs import ArchConfig
 from repro.core.consistency import reconcile
 from repro.core.controller import StateController
 from repro.core.detection import DetectionTimeline
-from repro.core.lccl import LinkScheduler
+from repro.core.lccl import Edge, LinkTopology, edge_key
 from repro.data.indexer import TidIndexer
 from repro.data.loader import PrefetchingLoader, SyntheticTokens
 from repro.models import build_model
 from repro.optim import AdamWConfig, adamw_update, cast_params, cosine_schedule
 from repro.runtime.failover import FailoverCosts
 from repro.train.state import init_state
-from repro.train.step import step_traffic
+from repro.train.step import step_traffic, submit_step_traffic
 
 PyTree = Any
 
@@ -101,7 +101,8 @@ class SimCluster:
                  ckpt_dir: Path = Path("/tmp/repro_ckpt"),
                  full_every: int = 50, seed: int = 0,
                  link_bw: float = 50e9, quantum: int = DEFAULT_QUANTUM,
-                 t_iter_model: float = 0.05):
+                 t_iter_model: float = 0.05, topology: str = "ring",
+                 edge_bw: Optional[Dict[Edge, float]] = None):
         self.cfg = cfg
         self.dp = dp
         self.active_dp = dp
@@ -117,15 +118,23 @@ class SimCluster:
         self.source = SyntheticTokens(dataset_size, seq_len, cfg.vocab_size,
                                       seed=seed)
         self.detection = DetectionTimeline()
-        # one link model for the whole cluster: the train loop's allreduce
-        # volume (TRAIN) and every checkpoint artifact (STATE chunks) share it
+        # per-link fabric: one LinkScheduler per ring edge. The train loop's
+        # allreduce volume loads every edge (TRAIN); each checkpoint artifact
+        # rides its routed edge path (STATE chunks), so TRAIN/STATE
+        # contention is per-edge instead of smeared over one global link
         self.quantum = quantum
+        self.link_bw = link_bw
+        self.topology_kind = topology
         self.t_iter_model = t_iter_model
         self.sim_time = 0.0
-        self.scheduler = LinkScheduler(link_bw, quantum=quantum)
-        self.transport = StreamTransport(self.scheduler)
+        self.topology = LinkTopology(dp, link_bw, quantum=quantum,
+                                     kind=topology, edge_bw=edge_bw)
+        self.transport = TopologyTransport(self.topology)
         self.instant_hidden = 0        # instant-ckpt drained within the iter
         self.instant_exposed = 0       # ... spilled past the boundary
+        # per-edge view of the same condition (adjacent ring edge per worker)
+        self.edge_instant_hidden: Dict[Edge, int] = {}
+        self.edge_instant_exposed: Dict[Edge, int] = {}
         eng_cfg = CkptEngineConfig(out_dir=Path(ckpt_dir),
                                    full_every=full_every, quantum=quantum)
         self.workers = [
@@ -141,6 +150,11 @@ class SimCluster:
         # partial recovery transfers, keyed (failed_wid, target_iteration)
         self._pending_recovery: Dict[Tuple[int, int],
                                      Tuple[ChunkedStream, StreamAssembler]] = {}
+        # shard layout the held snapshots were taken under; diverges from the
+        # live (dp, wid) numbering only across an elastic shrink with a
+        # recovery still pending (resume-after-rescale)
+        self._layout: Optional[Dict[str, Any]] = None
+        self._lazy_done_at: Optional[int] = None
         self.loss_history: List[float] = []
 
     # ------------------------------------------------------------------ #
@@ -185,19 +199,21 @@ class SimCluster:
                              t=self.sim_time)
             self.controller.report_ckpt(i, it)
 
-    def _train_wire_bytes(self) -> float:
-        """Per-worker gradient ring-allreduce volume (fp32 master grads)."""
+    def step_traffic_profile(self):
+        """This step's wire volumes (train/step.py accounting)."""
         if self._grad_bytes is None:
             self._grad_bytes = float(sum(
                 int(np.prod(l.shape)) * 4
                 for l in jax.tree.leaves(self.state["params"])))
-        return step_traffic(self._grad_bytes, self.active_dp).train_bytes
+        return step_traffic(self._grad_bytes, self.active_dp)
 
     def step(self) -> float:
         t0 = time.monotonic()
         batch = self._assemble_batch()
-        # the allreduce volume for this step preempts any in-flight STATE
-        self.transport.submit_train(self._train_wire_bytes(), self.sim_time)
+        # the allreduce volume for this step goes on EVERY live ring edge
+        # (per-edge TRAIN), preempting any in-flight STATE chunks there
+        submit_step_traffic(self.transport, self.step_traffic_profile(),
+                            self.sim_time)
         self.state, loss = self._step(self.state, batch)
         jax.block_until_ready(loss)
         self.iteration += 1
@@ -210,12 +226,21 @@ class SimCluster:
             w.step_times.append(time.monotonic() - t0)
         # advance the link model one modeled iteration; instant-ckpt chunks
         # that drain before the boundary were hidden (the FCR condition,
-        # emergent from the transport instead of Eq. 2)
+        # emergent from the transport instead of Eq. 2) — tracked globally
+        # and per adjacent ring edge
         self.sim_time += self.t_iter_model
         self.transport.run(until=self.sim_time)
-        tickets = [w.engine.last_instant_ticket
-                   for w in self.workers[:self.active_dp]
-                   if w.engine.last_instant_ticket is not None]
+        tickets = []
+        for w in self.workers[:self.active_dp]:
+            tk = w.engine.last_instant_ticket
+            if tk is None:
+                continue
+            tickets.append(tk)
+            src, dst = self.transport.instant_route(w.wid)
+            e = edge_key(src, dst)
+            book = (self.edge_instant_hidden if tk.complete
+                    else self.edge_instant_exposed)
+            book[e] = book.get(e, 0) + 1
         if tickets:
             if all(tk.complete for tk in tickets):
                 self.instant_hidden += 1
@@ -234,6 +259,8 @@ class SimCluster:
                        ) -> None:
         for wid in wids:
             self.workers[wid].alive = False
+            # the node's ring edges go dark: nothing routes through it
+            self.topology.fail_node(wid)
             if hardware:
                 self.workers[wid].host_alive = False
                 # host RAM gone: its own + neighbor backups are lost
@@ -242,25 +269,64 @@ class SimCluster:
                 self.workers[wid].engine.neighbor = type(
                     self.workers[wid].engine.neighbor)(2)
 
+    # ----------------------- shard layout plumbing ----------------------- #
+    # Snapshots are sliced by the (dp, wid) numbering in force when they were
+    # taken. After an elastic shrink with a recovery still pending, the live
+    # numbering differs; `_shard_layout` maps between the two so the resumed
+    # recovery reassembles the optimizer vector with the SNAPSHOT layout.
+    def _shard_layout(self) -> Tuple[int, Dict[int, int], Dict[int, int]]:
+        """(layout_dp, old_of: live wid -> layout wid, new_of: inverse)."""
+        if self._layout is None:
+            ident = {i: i for i in range(self.dp)}
+            return self.dp, dict(ident), dict(ident)
+        old_of = dict(self._layout["old_of"])
+        return self._layout["dp"], old_of, {o: n for n, o in old_of.items()}
+
+    def _slice_source(self, old_slice: int, ldp: int,
+                      new_of: Dict[int, int]) -> Tuple[str, Optional[int]]:
+        """Where old shard-slice `old_slice` comes from: ("own", live wid) if
+        its owner is healthy, else ("neighbor", live wid of its ring-successor
+        backup holder), else ("none", None)."""
+        owner = new_of.get(old_slice)
+        if owner is not None and self.workers[owner].alive and \
+                self.workers[owner].host_alive and \
+                self.workers[owner].engine.own.latest() is not None:
+            return "own", owner
+        holder = new_of.get((old_slice + 1) % ldp)
+        if holder is not None and self.workers[holder].host_alive and \
+                self.workers[holder].engine.neighbor.latest() is not None:
+            return "neighbor", holder
+        return "none", None
+
     def _recoverable_from_neighbors(self, failed: List[int]) -> bool:
-        for wid in failed:
-            holder = self.workers[(wid + 1) % self.dp]
-            if not holder.host_alive or \
-                    holder.engine.neighbor.latest() is None:
+        ldp, _, new_of = self._shard_layout()
+        for o in range(ldp):
+            kind, _ = self._slice_source(o, ldp, new_of)
+            if kind == "none":
                 return False
         return True
 
     def recover(self, *, hardware: bool = False,
-                interrupt_after_chunks: Optional[int] = None
-                ) -> RecoveryReport:
+                interrupt_after_chunks: Optional[int] = None,
+                corrupt_chunks: int = 0) -> RecoveryReport:
         """Recover every failed worker.
 
         `interrupt_after_chunks` models a SECOND failure striking mid-
         transfer: the recovery stream stops after that many chunks, workers
         stay down, and the partially-received chunks are retained — the next
-        `recover()` call resumes from them instead of starting over."""
+        `recover()` call resumes from them instead of starting over.
+
+        `corrupt_chunks` flips a byte in that many recovery chunks on the
+        wire (the first missing chunks, stream by stream in worker order):
+        the CRC rejects them and the NACK path retransmits — recovery must
+        heal with no rollback."""
         failed = [w.wid for w in self.workers if not w.alive]
         assert failed, "no failed workers"
+        # replacement pods come up before state moves: their ring edges
+        # relight, while any OTHER dark node keeps its edges dark and
+        # recovery paths route around it
+        for wid in failed:
+            self.topology.restore_node(wid)
         timeline: Dict[str, float] = {}
         timeline["detection"] = self.detection.detection_time()
         timeline["pod_creation"] = 7.0 if hardware else 0.5
@@ -271,19 +337,26 @@ class SimCluster:
         # window (§4.2) — recovery chunks only start once pods are up, so
         # the lazy stream has the link to itself first
         rank0 = self.workers[0]
-        if rank0.alive:
+        if rank0.alive and self._lazy_done_at != self.iteration:
+            # once per iteration: a resumed recovery must not re-save and
+            # re-stream the multi-GB redundant state it already persisted
             rank0.engine.lazy_backup(self.iteration,
                                      {"params": self.state["params"]},
                                      is_dp_rank0=True, t=self.sim_time)
+            self._lazy_done_at = self.iteration
         t_orch = (timeline["detection"] + timeline["pod_creation"] +
                   timeline["dependency_install"])
 
         if self._recoverable_from_neighbors(failed):
             report = self._recover_from_neighbors(
                 failed, timeline, hardware, interrupt_after_chunks,
-                t_start=self.sim_time + t_orch)
+                t_start=self.sim_time + t_orch,
+                corrupt_chunks=corrupt_chunks)
             if report.kind == "interrupted":
-                return report          # workers stay down; chunks retained
+                # workers stay down; their edges go dark again
+                for wid in failed:
+                    self.topology.fail_node(wid)
+                return report          # partial chunks retained
         else:
             if interrupt_after_chunks is not None:
                 raise ValueError(
@@ -301,14 +374,17 @@ class SimCluster:
 
     def _recover_from_neighbors(self, failed, timeline, hardware,
                                 interrupt_after_chunks=None,
-                                t_start: Optional[float] = None
-                                ) -> RecoveryReport:
-        # consistency: earliest globally-available version (§4.2)
-        versions = {w.wid: w.engine.own.latest().iteration
-                    if w.wid not in failed and w.engine.own.latest()
-                    else self.workers[(w.wid + 1) % self.dp]
-                    .engine.neighbor.latest().iteration
-                    for w in self.workers}
+                                t_start: Optional[float] = None,
+                                corrupt_chunks: int = 0) -> RecoveryReport:
+        ldp, old_of, new_of = self._shard_layout()
+        # consistency: earliest globally-available version (§4.2), over the
+        # snapshot layout's shard slices
+        versions = {}
+        for o in range(ldp):
+            kind, src_wid = self._slice_source(o, ldp, new_of)
+            keeper = (self.workers[src_wid].engine.own if kind == "own"
+                      else self.workers[src_wid].engine.neighbor)
+            versions[o] = keeper.latest().iteration
         target = min(versions.values())
         rolled = self.iteration - target
         # drop partial transfers aimed at a version we no longer want
@@ -317,13 +393,17 @@ class SimCluster:
                                   if k[1] == target}
 
         # ---- move the failed workers' shards as chunked STATE traffic ----
+        # each stream rides the shortest LIVE edge path holder -> newcomer:
+        # adjacent edge normally, multi-hop around dark nodes/edges otherwise
         t0 = self.sim_time if t_start is None else t_start
         chunks_total = chunks_sent = chunks_reused = 0
         tickets, inflight = [], {}
         budget = interrupt_after_chunks
+        corrupt_left = corrupt_chunks
         interrupted = False
         for wid in sorted(failed):
-            holder = self.workers[(wid + 1) % self.dp]
+            holder_wid = new_of[(old_of[wid] + 1) % ldp]
+            holder = self.workers[holder_wid]
             key = (wid, target)
             if key in self._pending_recovery:
                 stream, asm = self._pending_recovery[key]
@@ -339,9 +419,15 @@ class SimCluster:
                 take = missing[:max(budget - chunks_sent, 0)]
                 if len(take) < len(missing):
                     interrupted = True
+            # wire corruption: the CRC rejects these on delivery and the
+            # NACK path retransmits each one immediately
+            for seq in take[:corrupt_left]:
+                self.transport.corrupt_once(stream.stream_id, seq)
+            corrupt_left -= min(corrupt_left, len(take))
             if take:
-                tickets.append(self.transport.send(stream, t0, assembler=asm,
-                                                   seqs=take))
+                tickets.append(self.transport.send(
+                    stream, t0, assembler=asm, seqs=take,
+                    src=holder_wid, dst=wid))
                 chunks_sent += len(take)
             inflight[wid] = (stream, asm)
         self.transport.drain()
@@ -361,21 +447,30 @@ class SimCluster:
                                   chunks_sent=chunks_sent,
                                   chunks_reused=chunks_reused)
 
-        # ---- every stream landed: rebuild the optimizer vector ----
+        # ---- every stream landed: rebuild the optimizer vector, slice by
+        # slice of the SNAPSHOT layout (which differs from the live
+        # numbering only across an elastic shrink) ----
         vec, meta = _flatten_opt(self.state["opt"])
-        slices = shard_slices(len(vec), self.dp)
-        for w in self.workers:
-            if w.wid in failed:
-                stream, asm = inflight[w.wid]
-                assert asm.complete and asm.rejected == 0, \
-                    f"stream {stream.stream_id} incomplete/corrupt"
-                vec[slices[w.wid]] = asm.to_flat_dict()["shard"]
-                self._pending_recovery.pop((w.wid, target), None)
+        slices = shard_slices(len(vec), ldp)
+        for o in range(ldp):
+            owner = new_of.get(o)
+            if owner is not None and owner in inflight:
+                stream, asm = inflight[owner]
+                # NACK retransmission heals CRC rejects in-stream, so
+                # `rejected > 0` is fine as long as assembly completed
+                assert asm.complete, \
+                    f"stream {stream.stream_id} incomplete"
+                vec[slices[o]] = asm.to_flat_dict()["shard"]
+                self._pending_recovery.pop((owner, target), None)
             else:
-                snap = w.engine.own.get(target)
+                kind, src_wid = self._slice_source(o, ldp, new_of)
+                keeper = (self.workers[src_wid].engine.own if kind == "own"
+                          else self.workers[src_wid].engine.neighbor)
+                snap = keeper.get(target)
                 assert snap is not None, \
-                    f"version {target} missing on worker {w.wid}"
-                vec[slices[w.wid]] = snap.state["shard"]
+                    f"version {target} missing for layout slice {o}"
+                vec[slices[o]] = snap.state["shard"]
+        self._layout = None            # live numbering is authoritative again
         new_opt = _unflatten_opt(vec, meta)
         params = jax.tree.map(
             lambda m, p: jnp.asarray(m).astype(p.dtype),
@@ -444,12 +539,42 @@ class SimCluster:
     # Elastic rescale (no spare capacity): shrink DP, repartition data
     # ------------------------------------------------------------------ #
     def shrink(self, lost: List[int]) -> int:
+        """Shrink DP by dropping `lost` workers (no spare capacity).
+
+        A shrink can strike mid-recovery: partial recovery streams whose
+        target worker SURVIVES the rescale are kept (their assemblers retain
+        every received chunk) and the next `recover()` resumes them. The
+        shard layout the pending snapshots/streams were sliced under is
+        remembered in `_layout` so the resumed recovery reassembles
+        correctly; streams aimed at removed workers are dropped with them."""
+        old_dp = self.dp
         keep = [w for w in self.workers if w.wid not in lost]
+        wid_map = {w.wid: new_id for new_id, w in enumerate(keep)}
+        layout_old_of = {}
+        if self._layout is None:
+            # live numbering == snapshot layout until now
+            layout_dp, prev_old_of = old_dp, {i: i for i in range(old_dp)}
+        else:                           # stacked shrinks: compose mappings
+            layout_dp = self._layout["dp"]
+            prev_old_of = self._layout["old_of"]
+        for old_wid, new_wid in wid_map.items():
+            layout_old_of[new_wid] = prev_old_of[old_wid]
+        # keep partial recovery streams for surviving workers (key on the
+        # new numbering); streams for removed workers die with them
+        self._pending_recovery = {
+            (wid_map[wid], target): sa
+            for (wid, target), sa in self._pending_recovery.items()
+            if wid in wid_map}
         self.workers = keep
         for new_id, w in enumerate(self.workers):
             w.wid = new_id
+            w.engine.worker_id = new_id
         self.dp = len(self.workers)
         self.active_dp = self.dp
+        still_failed = [w.wid for w in self.workers if not w.alive]
+        self._layout = ({"dp": layout_dp, "old_of": layout_old_of}
+                        if (self._pending_recovery or still_failed)
+                        else None)
         self.controller.shrink_dp(lost)
         per = self.global_batch // max(self.active_dp, 1)
         self.global_batch = per * self.active_dp
@@ -459,4 +584,21 @@ class SimCluster:
         for i, w in enumerate(self.workers):
             w.loader = PrefetchingLoader(self.source, self.indexer, i,
                                          self.active_dp)
+        # the fabric rescales with the job: fresh per-edge ring at the new
+        # size; in-flight hops on the old fabric are lost (assemblers keep
+        # their received chunks, so resumed recoveries only move `missing()`).
+        # Surviving edges keep their configured bandwidth (hotspot edges stay
+        # throttled); newly-adjacent pairs get the default.
+        kept_bw = {edge_key(wid_map[a], wid_map[b]): sch.bw
+                   for (a, b), sch in self.topology.links.items()
+                   if a in wid_map and b in wid_map}
+        self.topology = LinkTopology(self.dp, self.link_bw,
+                                     quantum=self.quantum,
+                                     kind=self.topology_kind,
+                                     edge_bw=kept_bw)
+        self.transport = TopologyTransport(self.topology)
+        for w in self.workers:
+            w.engine.transport = self.transport
+            if not w.alive:
+                self.topology.fail_node(w.wid)
         return self.dp

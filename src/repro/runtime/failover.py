@@ -11,19 +11,22 @@ constant: it is *derived from a LinkScheduler run*. Recovery state moves as
 chunk-granular STATE traffic through the TRAIN/STATE two-queue link model
 (§5.3), so concurrent TRAIN traffic (healthy DP groups resuming their
 allreduce) preempts recovery chunks and delays the timeline exactly as it
-would on the wire.
+would on the wire. Pass a `LinkTopology` + edge `path` and the state leg is
+scheduled per-edge instead: recovery rides a (possibly multi-hop) path of
+per-link schedulers while the allreduce loads every ring edge, so a single
+hotspot edge bottlenecks the timeline by exactly its residual bandwidth.
 
 Orchestration steps we can only model (Docker pulls, pod scheduling) keep the
 paper's measured Table 5 values; connection building is calibrated on our
 lock-free init (fig8)."""
 from __future__ import annotations
 
-import math
 from dataclasses import dataclass, field
 from typing import Dict, Iterable, Optional, Sequence, Tuple
 
 from repro.core.detection import DetectionTimeline
-from repro.core.lccl import LinkScheduler, submit_chunked
+from repro.core.lccl import (Edge, LinkScheduler, LinkTopology,
+                             submit_chunked, submit_chunked_path)
 
 # (t_submit_seconds, bytes) pairs of TRAIN traffic sharing the link
 TrainTraffic = Sequence[Tuple[float, float]]
@@ -55,13 +58,30 @@ def schedule_state_phase(state_bytes: float, bandwidth: float, *,
                          quantum: float = 4 << 20,
                          train_traffic: TrainTraffic = (),
                          t0: float = 0.0,
-                         scheduler: Optional[LinkScheduler] = None) -> float:
+                         scheduler: Optional[LinkScheduler] = None,
+                         topology: Optional[LinkTopology] = None,
+                         path: Optional[Sequence[Edge]] = None) -> float:
     """Wall seconds to move `state_bytes` of recovery state through a
     TRAIN/STATE link scheduler, chunked at `quantum` granularity.
 
     Any `train_traffic` submitted on the same link preempts the recovery
     chunks — the returned duration grows by exactly the schedule the link
-    model produces, not by a hand-tuned contention factor."""
+    model produces, not by a hand-tuned contention factor.
+
+    With a `topology` (and an edge `path` through it), the recovery chunks
+    move store-and-forward along the path's per-edge schedulers while the
+    TRAIN traffic loads EVERY ring edge (the healthy groups' allreduce) —
+    the timeline then derives from per-edge contention, and a single hotspot
+    edge on the path bottlenecks recovery by exactly its residual
+    bandwidth."""
+    if topology is not None:
+        assert path, "per-link scheduling needs an edge path"
+        pts = submit_chunked_path(topology, "STATE", state_bytes, t0, path,
+                                  quantum)
+        for t, nbytes in train_traffic:
+            topology.submit_train_ring(nbytes, t)
+        topology.drain()
+        return max(pt.t_finish for pt in pts) - t0
     sched = scheduler or LinkScheduler(bandwidth, quantum=quantum)
     chunks = submit_chunked(sched, "STATE", state_bytes, t0, quantum)
     for t, nbytes in train_traffic:
@@ -74,12 +94,15 @@ def fftrainer_timeline(n_workers: int, state_bytes_per_worker: float,
                        costs: FailoverCosts = FailoverCosts(),
                        detection: DetectionTimeline = DetectionTimeline(),
                        train_traffic: TrainTraffic = (),
-                       scheduler: Optional[LinkScheduler] = None
+                       scheduler: Optional[LinkScheduler] = None,
+                       topology: Optional[LinkTopology] = None,
+                       path: Optional[Sequence[Edge]] = None
                        ) -> Dict[str, float]:
     t_net = costs.conn_base + costs.conn_per_worker * n_workers
     t_state = costs.state_ramp_fft + schedule_state_phase(
         state_bytes_per_worker, costs.neighbor_bw, quantum=costs.quantum,
-        train_traffic=train_traffic, scheduler=scheduler)
+        train_traffic=train_traffic, scheduler=scheduler,
+        topology=topology, path=path)
     tl = {
         # lower-bounded by our measured heartbeat path; paper measured 6 s
         "detection": max(detection.detection_time(), costs.detection_fft),

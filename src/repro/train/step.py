@@ -185,3 +185,15 @@ def artifacts_traffic(artifacts: StepArtifacts, grad_bytes: float, dp: int
                       ) -> TrafficProfile:
     """TrafficProfile for a built train step (razor plan already resolved)."""
     return step_traffic(grad_bytes, dp, razor=artifacts.razor)
+
+
+def submit_step_traffic(transport, profile: TrafficProfile, t: float):
+    """Put one iteration's allreduce volume on the fabric, edge by edge.
+
+    A ring allreduce moves 2(n-1) messages of S/n bytes across EVERY ring
+    edge, so the per-edge wire volume equals the per-worker volume
+    (`profile.train_bytes`) — on a `TopologyTransport` this loads each live
+    ring edge with exactly that, and checkpoint STATE chunks then contend
+    per-edge; on a single-link transport it degrades to the global
+    submission. Returns the submitted transfer(s)."""
+    return transport.submit_train(profile.train_bytes, t)

@@ -1,0 +1,233 @@
+"""Per-link topology (ISSUE 2 tentpole): ring construction, routing around
+dark nodes/edges, multi-hop store-and-forward timing, per-edge TRAIN/STATE
+contention, per-edge FCR matching the closed form, hotspot bottlenecks, and
+the NACK retransmission path through both transports."""
+import numpy as np
+import pytest
+
+from repro.ckpt.stream import (ChunkedStream, StreamAssembler, StreamTransport,
+                               TopologyTransport)
+from repro.core.fcr import fcr, fcr_hidden_per_edge, is_free
+from repro.core.lccl import (LinkScheduler, LinkTopology, edge_key,
+                             submit_chunked_path)
+
+
+# --------------------------------------------------------------------------- #
+# graph shape + routing
+# --------------------------------------------------------------------------- #
+def test_ring_edges_and_neighbors():
+    topo = LinkTopology(4, 1e9)
+    assert sorted(topo.edges()) == [(0, 1), (0, 3), (1, 2), (2, 3)]
+    assert topo.neighbors(0) == [1, 3]
+    full = LinkTopology(4, 1e9, kind="full")
+    assert len(full.edges()) == 6
+
+
+def test_ring_path_shortest_and_multihop():
+    topo = LinkTopology(6, 1e9)
+    assert topo.path(0, 1) == [(0, 1)]
+    assert topo.path(1, 0) == [(0, 1)]
+    assert topo.path(0, 2) == [(0, 1), (1, 2)]
+    assert topo.path(0, 5) == [(0, 5)]         # the short way around
+    assert topo.path(0, 0) == []
+
+
+def test_path_routes_around_dark_node_and_edge():
+    topo = LinkTopology(4, 1e9)
+    topo.fail_node(1)
+    # 0 -> 2 must detour the long way: 0-3, 3-2
+    assert topo.path(0, 2) == [(0, 3), (2, 3)]
+    topo.restore_node(1)
+    topo.fail_edge(0, 1)
+    assert topo.path(0, 1) == [(0, 3), (2, 3), (1, 2)]
+    topo.restore_edge(0, 1)
+    assert topo.path(0, 1) == [(0, 1)]
+
+
+def test_no_live_path_raises():
+    topo = LinkTopology(4, 1e9)
+    topo.fail_node(1)
+    topo.fail_node(3)
+    with pytest.raises(RuntimeError, match="no live path"):
+        topo.path(0, 2)
+
+
+def test_least_loaded_edge_prefers_idle():
+    topo = LinkTopology(4, 1e9)
+    topo.edge(0, 1).submit("TRAIN", 5e8, 0.0)
+    topo.edge(1, 2).submit("STATE", 5e8, 0.0)
+    assert topo.least_loaded_edge() in ((0, 3), (2, 3))
+    topo.fail_node(3)                  # both idle edges go dark
+    assert topo.least_loaded_edge() == (1, 2) or \
+        topo.least_loaded_edge() == (0, 1)
+
+
+# --------------------------------------------------------------------------- #
+# multi-hop store-and-forward timing
+# --------------------------------------------------------------------------- #
+def test_multihop_pipeline_timing():
+    """Chunked store-and-forward over k equal hops finishes in
+    ~ total/bw + (k-1) * quantum/bw (pipelined), not k * total/bw."""
+    topo = LinkTopology(6, 1e6, quantum=1e4)
+    path = topo.path(0, 3)             # 3 hops
+    pts = submit_chunked_path(topo, "STATE", 1e5, 0.0, path, quantum=1e4)
+    topo.drain()
+    finish = max(pt.t_finish for pt in pts)
+    assert finish == pytest.approx(0.1 + 2 * 0.01, rel=1e-6)
+
+
+def test_hotspot_edge_bottlenecks_exactly():
+    """Acceptance criterion: with a single saturated hotspot edge on the
+    path, recovery is bottlenecked by exactly that edge's residual
+    bandwidth."""
+    bw, hot_bw = 1e9, 1e8
+    topo = LinkTopology(8, bw, quantum=1 << 20)
+    topo.set_bandwidth(1, 2, hot_bw)   # the hotspot
+    path = topo.path(0, 3)             # 0-1, 1-2(hot), 2-3
+    nbytes = 64 << 20
+    pts = submit_chunked_path(topo, "STATE", nbytes, 0.0, path)
+    topo.drain()
+    finish = max(pt.t_finish for pt in pts)
+    # dominated by the hotspot: total/hot_bw, plus one pipelined quantum on
+    # the (fast) edge before and after
+    expect = nbytes / hot_bw + 2 * (1 << 20) / bw
+    assert finish == pytest.approx(expect, rel=1e-3)
+    # and WITHOUT the hotspot the same path is ~10x faster
+    topo2 = LinkTopology(8, bw, quantum=1 << 20)
+    pts2 = submit_chunked_path(topo2, "STATE", nbytes, 0.0, topo2.path(0, 3))
+    topo2.drain()
+    assert finish > 8 * max(pt.t_finish for pt in pts2)
+
+
+def test_train_preempts_only_its_edge():
+    """TRAIN on one edge delays only streams crossing that edge."""
+    def finish(load_edge):
+        topo = LinkTopology(4, 1e6, quantum=1e3)
+        if load_edge is not None:
+            topo.submit_train_edge(*load_edge, 2e6, 0.0)   # 2 s of TRAIN
+        pts = submit_chunked_path(topo, "STATE", 1e5, 0.0,
+                                  [(0, 1)], quantum=1e3)
+        topo.drain()
+        return max(pt.t_finish for pt in pts)
+    assert finish(None) == pytest.approx(0.1, rel=1e-6)
+    assert finish((1, 2)) == pytest.approx(0.1, rel=1e-6)   # other edge: free
+    assert finish((0, 1)) > 2.0                             # same edge: waits
+
+
+def test_submit_train_ring_loads_every_live_edge():
+    topo = LinkTopology(4, 1e9)
+    topo.fail_node(2)
+    trs = topo.submit_train_ring(1e6, 0.0)
+    assert len(trs) == 2               # edges (1,2) and (2,3) are dark
+    assert all(tr.kind == "TRAIN" for tr in trs)
+
+
+# --------------------------------------------------------------------------- #
+# per-edge FCR (acceptance criterion: matches the closed form on a
+# dedicated ring)
+# --------------------------------------------------------------------------- #
+def test_per_edge_fcr_matches_closed_form_on_dedicated_ring():
+    rng = np.random.default_rng(7)
+    for _ in range(10):
+        s = float(rng.integers(128, 1 << 16))
+        b = float(rng.integers(1, 64))
+        c = float(rng.uniform(1e12, 1e16))
+        bws = {e: float(rng.uniform(1e9, 1e12)) for e in
+               [(0, 1), (1, 2), (2, 3), (0, 3)]}
+        if any(abs(fcr(s, b, v, c) - 1.0) < 1e-3 for v in bws.values()):
+            continue                   # numerical knife-edge
+        topo = LinkTopology(4, 1e9, edge_bw=bws)
+        hidden = fcr_hidden_per_edge(topo, s, b, c, phi=1e8)
+        for e, v in bws.items():
+            assert hidden[e] == is_free(s, b, v, c), (e, v)
+
+
+def test_per_edge_fcr_hotspot_breaks_only_that_edge():
+    s, b, c, phi = 4096, 8, 1e15, 1e8
+    v = 2.0 * c / (s * b) * 4.0        # comfortably free default links
+    topo = LinkTopology(4, v)
+    topo.set_bandwidth(1, 2, v / 16.0)  # asymmetric hotspot: FCR < 1 there
+    hidden = fcr_hidden_per_edge(topo, s, b, c, phi=phi)
+    assert hidden[(1, 2)] is False
+    assert all(hidden[e] for e in hidden if e != (1, 2))
+
+
+# --------------------------------------------------------------------------- #
+# TopologyTransport: routed streams + NACK healing
+# --------------------------------------------------------------------------- #
+def _stream_and_asm(n=400, quantum=512, sid="s"):
+    arr = np.arange(n, dtype=np.float32)
+    cs = ChunkedStream.from_array(sid, arr, quantum=quantum)
+    return arr, cs, StreamAssembler.for_stream(cs)
+
+
+def test_topology_transport_multihop_bitwise():
+    topo = LinkTopology(6, 1e6, quantum=256)
+    tp = TopologyTransport(topo)
+    arr, cs, asm = _stream_and_asm()
+    ticket = tp.send(cs, 0.0, assembler=asm, src=0, dst=3)
+    tp.drain()
+    assert ticket.complete and asm.complete
+    np.testing.assert_array_equal(asm.to_array(), arr)
+
+
+def test_topology_transport_least_loaded_for_unrouted():
+    topo = LinkTopology(4, 1e6, quantum=256)
+    topo.edge(0, 1).submit("TRAIN", 1e6, 0.0)
+    tp = TopologyTransport(topo)
+    arr, cs, asm = _stream_and_asm()
+    tp.send(cs, 0.0, assembler=asm)    # no src/dst: least-loaded edge
+    assert topo.edge(0, 1).pending_bytes("STATE") == 0.0
+    tp.drain()
+    assert asm.complete
+
+
+def test_nack_retransmit_heals_corrupt_chunk_topology():
+    topo = LinkTopology(4, 1e6, quantum=256)
+    tp = TopologyTransport(topo)
+    arr, cs, asm = _stream_and_asm()
+    tp.corrupt_once("s", 1)
+    tp.corrupt_once("s", 2)
+    tp.send(cs, 0.0, assembler=asm, src=2, dst=0)
+    tp.drain()
+    assert asm.complete                # healed without a missing() pass
+    assert asm.rejected == 2
+    assert tp.nacks_sent == 2
+    np.testing.assert_array_equal(asm.to_array(), arr)
+
+
+def test_nack_retransmit_heals_on_single_link_too():
+    tp = StreamTransport(LinkScheduler(1e6, quantum=256))
+    arr, cs, asm = _stream_and_asm()
+    tp.corrupt_once("s", 0)
+    ticket = tp.send(cs, 0.0, assembler=asm)
+    tp.drain()
+    assert asm.complete and ticket.complete
+    assert tp.nacks_sent == 1
+    # the resend costs link time: finish strictly after the clean case
+    tp2 = StreamTransport(LinkScheduler(1e6, quantum=256))
+    _, cs2, asm2 = _stream_and_asm()
+    t2 = tp2.send(cs2, 0.0, assembler=asm2)
+    tp2.drain()
+    assert ticket.finish_time > t2.finish_time
+
+
+def test_nack_gives_up_after_retransmit_budget():
+    """Persistent corruption exhausts the per-chunk NACK budget; the chunk
+    stays in missing() (a later full resend pass can still heal it)."""
+    topo = LinkTopology(4, 1e6, quantum=256)
+    tp = TopologyTransport(topo)
+    tp.max_retransmits = 2
+    arr, cs, asm = _stream_and_asm()
+    # corrupted on the initial send AND both retransmits: budget exhausted
+    tp.corrupt_once("s", 0, times=3)
+    tp.send(cs, 0.0, assembler=asm, src=0, dst=1)
+    tp.drain()
+    assert asm.missing() == [0]
+    assert tp.nacks_sent == 2          # original + 2 retransmits, then stop
+    assert asm.rejected == 3
+    # the classic missing() resend pass (clean wire now) heals it
+    tp.send(cs, 10.0, assembler=asm, src=0, dst=1)
+    tp.drain()
+    assert asm.complete
+    np.testing.assert_array_equal(asm.to_array(), arr)

@@ -7,7 +7,15 @@ import textwrap
 
 import pytest
 
-pytestmark = pytest.mark.slow    # subprocess 8-virtual-device SPMD runs
+# The subprocess SPMD tests are seconds each on the 0.4.37 floor thanks to
+# repro/compat.py:shard_map_compat; only the all-families dry-run (minutes of
+# jit compiles) keeps the `slow` marker. Partial-manual shard_map still
+# CHECK-fails inside old XLA, so that one test needs AxisType-era jax (the
+# CI latest-jax matrix leg runs it).
+requires_axis_type = pytest.mark.skipif(
+    not hasattr(pytest.importorskip("jax").sharding, "AxisType"),
+    reason="partial-manual shard_map CHECK-fails in pre-AxisType XLA "
+           "(hlo_sharding_util IsManualSubgroup); needs fresh jax")
 
 
 def _run(script: str, timeout: int = 560) -> str:
@@ -129,6 +137,7 @@ def test_train_step_backup_roundtrip():
     """)
 
 
+@requires_axis_type
 def test_cross_pod_compression_close_to_exact():
     """int8 cross-pod gradient mean with error feedback ~= exact mean.
 
@@ -170,6 +179,7 @@ def test_cross_pod_compression_close_to_exact():
     """)
 
 
+@pytest.mark.slow
 def test_small_mesh_dryrun_all_families():
     """Lower+compile one representative per family on a 2x2x2 mesh."""
     _run("""

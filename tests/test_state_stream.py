@@ -224,6 +224,55 @@ def test_multi_failure_resumes_from_partial_chunks(tmp_path):
         np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
 
 
+def test_corruption_mid_recovery_heals_via_nack(tmp_path):
+    """Bytes flipped on the wire mid-recovery are CRC-rejected and healed by
+    per-chunk NACK retransmits — recovery completes with NO rollback and the
+    recovered state is bitwise identical to an uninterrupted run."""
+    import jax
+    ref = _mk_cluster(tmp_path / "a")
+    ref.run(8)
+
+    clu = _mk_cluster(tmp_path / "b")
+    clu.run(5)
+    clu.inject_failure([1], hardware=True)
+    rep = clu.recover(hardware=True, corrupt_chunks=3)
+    assert rep.kind == "hardware"
+    assert rep.rolled_back_iterations == 0     # healed in-stream: no rollback
+    assert clu.transport.nacks_sent == 3       # one immediate resend each
+    clu.run(8 - clu.iteration)
+    for x, y in zip(jax.tree.leaves(ref.state), jax.tree.leaves(clu.state)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_shrink_mid_transfer_keeps_partial_streams(tmp_path):
+    """Elastic shrink striking mid-recovery: the removed worker's stream dies
+    with it, but the surviving failed worker's partial stream (and its
+    received chunks) persists across the rescale and the next recover()
+    RESUMES it — no restart, no rollback."""
+    import jax
+    clu = _mk_cluster(tmp_path)
+    clu.run(5)
+    at_failure = [np.asarray(x).copy() for x in jax.tree.leaves(clu.state)]
+
+    clu.inject_failure([0, 2], hardware=True)  # non-adjacent: backups survive
+    r1 = clu.recover(hardware=True, interrupt_after_chunks=3)
+    assert r1.kind == "interrupted" and r1.chunks_sent == 3
+
+    # no spare capacity for worker 2: shrink it away mid-transfer; worker 0
+    # keeps its partial recovery stream across the rescale
+    assert clu.shrink([2]) == 3
+    r2 = clu.recover(hardware=True)
+    assert r2.kind == "hardware"
+    assert r2.chunks_reused == 3               # partial chunks NOT re-sent
+    assert r2.rolled_back_iterations == 0
+    # the rebuilt state is bitwise the state at the failure iteration
+    for x, y in zip(at_failure, jax.tree.leaves(clu.state)):
+        np.testing.assert_array_equal(x, np.asarray(y))
+    # training continues at dp=3
+    losses = clu.run(3)
+    assert all(np.isfinite(l) for l in losses)
+
+
 def test_instant_ckpt_hidden_on_fast_link(tmp_path):
     """On the ICI-class default link the per-iteration shard drains inside
     the modeled iteration — the FCR condition, emergent from the transport."""
