@@ -43,6 +43,60 @@ def run(tmp: Path = Path("/tmp/repro_bench_t5"), tiny: bool = False) -> None:
         row(f"table5/{n}gpu/fftrainer/state_recovery_hotspot_edge", 0.0,
             f"{ffe['network_and_state']:.1f}")
 
+        # bidirectional ring routing (ISSUE 3): split the recovery across
+        # BOTH directions of a symmetric idle ring by residual bandwidth —
+        # the state leg (the part routing can change; connection building
+        # overlaps it either way) is strictly faster than the single
+        # BFS-first direction, ~halved on an idle ring
+        from repro.runtime.failover import schedule_state_phase
+        topo_uni = LinkTopology(min(n, 16), 50e9, quantum=4 << 20)
+        t_uni = schedule_state_phase(state_bytes, 50e9, quantum=4 << 20,
+                                     topology=topo_uni,
+                                     path=topo_uni.path(0, 1))
+        topo_bi = LinkTopology(min(n, 16), 50e9, quantum=4 << 20)
+        t_bi = schedule_state_phase(state_bytes, 50e9, quantum=4 << 20,
+                                    topology=topo_bi,
+                                    paths=topo_bi.disjoint_paths(0, 1))
+        row(f"table5/{n}gpu/fftrainer/state_leg_unidirectional", 0.0,
+            f"{t_uni:.3f}")
+        row(f"table5/{n}gpu/fftrainer/state_leg_bidirectional", 0.0,
+            f"{t_bi:.3f}")
+        row(f"table5/{n}gpu/bidi_beats_uni", 0.0, t_bi < t_uni)
+
+        # cross-pod recovery over a DARKENED pod (ISSUE 3): 4 pods of ICI
+        # rings joined by a 5 GB/s, 1 ms DCN gateway ring; pod 1 is dark, so
+        # the fetch pod0 -> pod2 races the other way around the gateway
+        # ring. The timeline is bounded by the DCN residual bandwidth plus
+        # the per-hop delivery latency of the detour
+        from repro.core.lccl import PodFabric
+        from repro.runtime.failover import FailoverCosts
+        costs = FailoverCosts()
+        fab = PodFabric(4, max(min(n, 16) // 4, 1), 50e9, costs.dcn_bw,
+                        quantum=4 << 20, dcn_latency=costs.dcn_latency)
+        fab.fail_pod(1)
+        path = fab.path(fab.gateway(0), fab.gateway(2))
+        n_dcn = sum(1 for e in path if fab.tier(*e) == "dcn")
+        ffx = fftrainer_timeline(n, state_bytes, topology=fab, path=path)
+        bound = (costs.state_ramp_fft + state_bytes / costs.dcn_bw +
+                 n_dcn * costs.dcn_latency)
+        row(f"table5/{n}gpu/fftrainer/state_recovery_crosspod_storm", 0.0,
+            f"{ffx['network_and_state']:.2f}")
+        row(f"table5/{n}gpu/fftrainer/crosspod_dcn_bound", 0.0,
+            f"{bound:.2f}")
+        row(f"table5/{n}gpu/crosspod_within_dcn_bound", 0.0,
+            ffx["network_and_state"] <= bound * 1.05)
+
+        # per-tier FCR on the idle fabric matches the closed form (Eq. 2
+        # evaluated at each tier's bandwidth)
+        from repro.core.fcr import fcr_hidden_per_tier, fcr_per_tier
+        s_tok, b_dev, c_flops = 4096, 8, 1e15
+        closed = fcr_per_tier(fab, s_tok, b_dev, c_flops)
+        hidden = fcr_hidden_per_tier(fab, s_tok, b_dev, c_flops, phi=1e8)
+        for tier_name, value in sorted(closed.items()):
+            row(f"table5/{n}gpu/fcr_{tier_name}", 0.0, f"{value:.2f}")
+            row(f"table5/{n}gpu/fcr_{tier_name}_hidden_matches_closed", 0.0,
+                hidden[tier_name] == (value >= 1.0))
+
     # end-to-end measured on the simulator (real chunked state movement)
     from repro.runtime.cluster import SimCluster
     cfg = dataclasses.replace(reduce_for_smoke(get_arch("qwen3-0.6b")),

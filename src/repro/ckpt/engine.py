@@ -8,9 +8,11 @@ consistency (§4.2) and owns the every-N full async disk checkpoint.
 
 Transport: every artifact the engine produces — instant neighbor shards, full
 async fallbacks, lazy backups — is additionally cut into CRC'd quanta and
-routed through the shared `StateStream` transport as STATE traffic (§5.3)
-when one is attached, so checkpoint movement competes with (and is preempted
-by) the train loop's TRAIN traffic on the same modeled link."""
+routed through the `StateStream` transport as STATE traffic (§5.3) when one
+is attached, so checkpoint movement competes with (and is preempted by) the
+train loop's TRAIN traffic edge by edge on the modeled fabric: instant
+shards ride the adjacent ICI ring edge, lazy backups fan out onto whichever
+tier has slack, full fallbacks take the least-loaded live edge."""
 from __future__ import annotations
 
 import time
@@ -60,12 +62,14 @@ class CkptEngine:
                 stream: Optional[ChunkedStream] = None,
                 route: str = "any") -> Optional[StreamTicket]:
         """Cut `tree` into CRC'd quanta (or take a prebuilt stream) and put
-        it on the transport as STATE traffic. No-op (returns None) when no
-        transport is attached.
+        it on the transport as STATE traffic at simulation time `t`
+        (seconds). No-op (returns None) when no transport is attached.
 
-        `route` picks the edge path on a per-link transport: "instant" rides
-        the adjacent DP-ring edge (predecessor -> this worker); "any" (full
-        and lazy artifacts) lets the transport pick the least-loaded live
+        `route` picks the edge placement on a fabric transport: "instant"
+        rides the adjacent DP-ring edge (predecessor -> this worker, single
+        shortest path — one hop, nothing to split); "lazy" fans out over
+        this worker's incident live edges by residual bandwidth (the slack
+        tier absorbs it); "any" (full artifacts) takes the least-loaded live
         edge. A single-link transport ignores routing."""
         if self.transport is None:
             return None
@@ -74,10 +78,14 @@ class CkptEngine:
                                                quantum=self.cfg.quantum)
         asm = StreamAssembler.for_stream(stream)
         src = dst = None
+        policy = "split"
         if route == "instant":
             src, dst = self.transport.instant_route(self.worker_id)
+            policy = "shortest"
+        elif route == "lazy":
+            src = self.worker_id
         ticket = self.transport.send(stream, t, assembler=asm, src=src,
-                                     dst=dst)
+                                     dst=dst, policy=policy)
         self.streamed_chunks += stream.n_chunks
         self.streamed_bytes += stream.total_bytes
         return ticket
@@ -166,8 +174,11 @@ class CkptEngine:
         path = (Path(self.cfg.out_dir) /
                 f"lazy_it{iteration:08d}_w{self.worker_id:05d}.npz")
         save_pytree(path, redundant_state, {"iteration": iteration})
+        # the multi-GB redundant state fans out over this worker's incident
+        # edges (both ring directions, plus a gateway's DCN uplink) by
+        # residual bandwidth — it lands on whichever tier has slack
         self._stream(f"lazy/it{iteration:08d}/w{self.worker_id:05d}",
-                     redundant_state, t)
+                     redundant_state, t, route="lazy")
         return path
 
     def close(self) -> None:

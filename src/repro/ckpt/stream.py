@@ -2,10 +2,14 @@
 
 Every checkpoint artifact — instant neighbor shards, full async fallbacks,
 lazy backups, recovery fetches — is cut into fixed-size CRC'd quanta
-(`StreamChunk`) and routed through one shared `LinkScheduler` as STATE
-traffic, while the train loop submits its gradient-allreduce volume as TRAIN
-traffic. Preemption, overlap, and the FCR hiding condition then *emerge* from
-the single transport model instead of living in three hand-tuned formulas.
+(`StreamChunk`) and scheduled as STATE traffic on the modeled fabric, while
+the train loop submits its gradient-allreduce volume as TRAIN traffic.
+Preemption, overlap, and the FCR hiding condition then *emerge* from the one
+transport model instead of living in three hand-tuned formulas.
+
+Units: chunk/stream sizes are bytes, `quantum` is bytes, all transport
+timestamps (`t`, finish times) are seconds on the simulation clock, and
+bandwidths inherited from the fabric are bytes/second.
 
 Layers:
 
@@ -14,15 +18,21 @@ Layers:
   * `StreamAssembler` — consumer: accepts chunks in any order, verifies CRCs,
                         dedupes, and reports what is still `missing()` — the
                         basis of resumable partial transfers.
-  * `StreamTransport` — binds streams to a shared `LinkScheduler`: each chunk
-                        becomes one STATE transfer; finished transfers are
-                        pumped into their assemblers; TRAIN traffic submitted
-                        through the same object preempts every stream.
-  * `TopologyTransport` — the per-link variant: routes each stream onto a
-                        `LinkTopology` edge path (neighbor shards ride the
-                        adjacent ring edge, recovery fetches take a multi-hop
-                        live path, full/lazy artifacts pick the least-loaded
-                        edge) so contention is per-edge, not smeared.
+  * `StreamTransport` — binds streams to one shared `LinkScheduler` (the
+                        PR-1 single-link model, kept for analytic baselines):
+                        each chunk becomes one STATE transfer; finished
+                        transfers are pumped into their assemblers; TRAIN
+                        traffic submitted through the same object preempts
+                        every stream.
+  * `TopologyTransport` — the fabric variant: routes each stream onto
+                        `LinkTopology` / `PodFabric` edge paths. Neighbor
+                        shards ride the adjacent ring edge; recovery fetches
+                        split across both ring directions by residual
+                        bandwidth (bidirectional routing); lazy backups fan
+                        out over the source's incident edges onto whichever
+                        tier has slack; full artifacts pick the least-loaded
+                        live edge. Contention is per-edge, per-tier — never
+                        smeared.
 
 Both transports heal corruption with NACK-driven retransmission: a chunk the
 assembler rejects on CRC is re-submitted immediately (alone), instead of
@@ -39,7 +49,7 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core.lccl import (Edge, LinkScheduler, LinkTopology, PathTransfer,
-                             Transfer)
+                             Transfer, edge_key)
 
 PyTree = Any
 DEFAULT_QUANTUM = 1 << 20          # 1 MiB — the paper's chunk granularity
@@ -85,8 +95,10 @@ def _leaf_records(tree: PyTree) -> List[Tuple[str, np.ndarray]]:
 class ChunkedStream:
     """A checkpoint artifact cut into CRC'd fixed-size quanta.
 
-    `meta` carries enough layout information (leaf key, dtype, shape, byte
-    offset) to rebuild the original pytree from the reassembled byte blob.
+    `quantum` is the chunk size in bytes (the last chunk may be short);
+    `data` is the serialized artifact. `meta` carries enough layout
+    information (leaf key, dtype, shape, byte offset) to rebuild the
+    original pytree from the reassembled byte blob.
     """
 
     def __init__(self, stream_id: str, data: bytes,
@@ -381,14 +393,16 @@ class StreamTransport(_NackingTransport):
     def send(self, stream: ChunkedStream, t: float,
              assembler: Optional[StreamAssembler] = None,
              seqs: Optional[Sequence[int]] = None,
-             src: Optional[int] = None, dst: Optional[int] = None
-             ) -> StreamTicket:
-        """Submit a stream's chunks as STATE traffic at link-time `t`.
+             src: Optional[int] = None, dst: Optional[int] = None,
+             policy: str = "split") -> StreamTicket:
+        """Submit a stream's chunks as STATE traffic at link-time `t`
+        (seconds; chunk sizes in bytes).
 
         `seqs` restricts to a subset of chunk indices — used to resume a
         partial transfer (send only `assembler.missing()`) or to model a
-        transfer interrupted after N chunks. `src`/`dst` are accepted for
-        interface parity with `TopologyTransport` and ignored (one link)."""
+        transfer interrupted after N chunks. `src`/`dst`/`policy` are
+        accepted for interface parity with `TopologyTransport` and ignored
+        (one link has no routing)."""
         chunks, ticket = self._open_ticket(stream, t, assembler, seqs)
         for c in chunks:
             tr = self.scheduler.submit("STATE", float(c.nbytes), t)
@@ -428,18 +442,28 @@ class StreamTransport(_NackingTransport):
 
 
 class TopologyTransport(_NackingTransport):
-    """Per-link transport: streams are routed onto `LinkTopology` edge paths.
+    """Per-link transport: streams are routed onto `LinkTopology` /
+    `PodFabric` edge paths.
 
-    Routing rules (ISSUE 2):
-      * instant neighbor shards — the adjacent ring edge (`instant_route`);
-      * recovery fetches — the shortest *live* path src -> dst, multi-hop
-        around dark nodes/edges;
-      * full/lazy artifacts (no src/dst given) — the least-loaded live edge,
-        keeping the lazy path off busy training edges.
+    Routing rules (ISSUE 2, tiered + bidirectional since ISSUE 3):
+      * instant neighbor shards — the adjacent ring edge (`instant_route`,
+        ``policy="shortest"``: one hop, nothing to split);
+      * recovery fetches (src AND dst given) — by default split across up to
+        two edge-disjoint live paths (both ring directions; on a `PodFabric`
+        both ways around the gateway ring) with bytes divided by residual
+        bandwidth (`LinkTopology.split_bytes`), so an idle symmetric ring
+        moves a recovery in half the single-direction time;
+      * lazy backups (src given, dst None) — split across the source's
+        incident live edges by residual bandwidth: the state drains onto
+        whichever tier (ICI ring direction or DCN uplink) has slack;
+      * full artifacts (no src/dst) — the least-loaded live edge by queued
+        drain seconds, tier-aware (a TRAIN-saturated ICI ring loses to an
+        idle DCN hop).
 
     TRAIN volume is submitted edge-by-edge (`submit_train` loads every live
-    ring edge with the per-edge allreduce bytes), so a hotspot edge delays
-    exactly the streams crossing it."""
+    ring edge with the per-edge allreduce bytes; `submit_train_tiers` loads
+    each tier with its own hierarchical-allreduce volume), so a hotspot edge
+    delays exactly the streams crossing it."""
 
     def __init__(self, topology: LinkTopology):
         self.topology = topology
@@ -449,6 +473,13 @@ class TopologyTransport(_NackingTransport):
     def submit_train(self, nbytes_per_edge: float, t: float) -> List[Transfer]:
         trs = self.topology.submit_train_ring(nbytes_per_edge, t)
         self.train_bytes_submitted += nbytes_per_edge * len(trs)
+        return trs
+
+    def submit_train_tiers(self, tier_bytes, t: float) -> List[Transfer]:
+        """Hierarchical allreduce: per-edge TRAIN bytes by tier
+        ({TIER_ICI: ..., TIER_DCN: ...}, bytes per edge)."""
+        trs = self.topology.submit_train_tiers(tier_bytes, t)
+        self.train_bytes_submitted += sum(tr.size for tr in trs)
         return trs
 
     def submit_train_edge(self, u: int, v: int, nbytes: float, t: float
@@ -461,29 +492,67 @@ class TopologyTransport(_NackingTransport):
         over the adjacent edge."""
         return (wid - 1) % self.topology.n, wid
 
-    def route(self, src: Optional[int], dst: Optional[int]) -> List[Edge]:
-        if src is None or dst is None:
-            if not self.topology.live_edges():
-                return []               # single-node fabric: local delivery
-            # total queued load (TRAIN included): keep full/lazy artifacts
-            # off busy training edges
-            return [self.topology.least_loaded_edge()]
-        return self.topology.path(src, dst)
+    def routes(self, src: Optional[int], dst: Optional[int], nbytes: float,
+               policy: str = "split") -> List[Tuple[List[Edge], float]]:
+        """Resolve the edge paths a `nbytes` stream rides and the byte share
+        each carries. Returns [(path, share_bytes), ...]; an empty path is
+        local delivery."""
+        topo = self.topology
+        if src is not None and dst is not None:
+            if src == dst:
+                return [([], nbytes)]
+            if policy == "shortest":
+                return [(topo.path(src, dst), nbytes)]
+            paths = topo.disjoint_paths(src, dst, k=2)
+            if not paths:
+                raise RuntimeError(
+                    f"no live path {src} -> {dst} "
+                    f"(dark nodes {sorted(topo.dark_nodes)}, "
+                    f"dark edges {sorted(topo.dark_edges)})")
+            shares = topo.split_bytes(paths, nbytes)
+            return [(p, s) for p, s in zip(paths, shares) if s > 0] \
+                or [(paths[0], nbytes)]
+        if src is not None:
+            # lazy backup: fan out over the source's incident live edges by
+            # residual bandwidth — both ring directions, and on a PodFabric
+            # a gateway's DCN uplinks too (tier slack, not topology habit)
+            fans = [[edge_key(src, nb)] for nb in topo.neighbors(src)]
+            if not fans:
+                return [([], nbytes)]   # isolated node: local delivery
+            shares = topo.split_bytes(fans, nbytes)
+            return [(p, s) for p, s in zip(fans, shares) if s > 0] \
+                or [(fans[0], nbytes)]
+        if not topo.live_edges():
+            return [([], nbytes)]       # single-node fabric: local delivery
+        # full artifacts: least queued drain-seconds (TRAIN included), so
+        # they stay off busy training edges and off slow tiers
+        return [([topo.least_loaded_edge()], nbytes)]
 
     def send(self, stream: ChunkedStream, t: float,
              assembler: Optional[StreamAssembler] = None,
              seqs: Optional[Sequence[int]] = None,
-             src: Optional[int] = None, dst: Optional[int] = None
-             ) -> StreamTicket:
-        """Submit a stream's chunks as STATE traffic along an edge path.
+             src: Optional[int] = None, dst: Optional[int] = None,
+             policy: str = "split") -> StreamTicket:
+        """Submit a stream's chunks as STATE traffic along routed edge paths
+        at link-time `t` (seconds).
 
-        With `src`/`dst` the chunks ride the shortest live path between the
-        two nodes (store-and-forward per hop); without, they take the
-        least-loaded edge. `seqs` resumes a partial transfer, as in
+        With `src`/`dst` the chunks ride up to two edge-disjoint live paths
+        between the two nodes (store-and-forward per hop), bytes split by
+        residual bandwidth; ``policy="shortest"`` forces the single BFS
+        path. With only `src`, chunks fan out over its incident edges (lazy
+        placement). `seqs` resumes a partial transfer, as in
         `StreamTransport.send`."""
         chunks, ticket = self._open_ticket(stream, t, assembler, seqs)
-        path = self.route(src, dst)
+        nbytes = float(sum(c.nbytes for c in chunks))
+        routed = self.routes(src, dst, nbytes, policy)
+        # hand chunks to paths in order, each path taking its byte share
+        quota = [share for _, share in routed]
+        which = 0
         for c in chunks:
+            while which < len(routed) - 1 and quota[which] < c.nbytes / 2:
+                which += 1
+            quota[which] -= c.nbytes
+            path = routed[which][0]
             pt = self.topology.submit_path("STATE", float(c.nbytes), t, path)
             ticket.transfers.append(pt)
             self.state_bytes_submitted += c.nbytes

@@ -62,6 +62,48 @@ def sweep(seq_lens: Iterable[int], batches: Iterable[int],
     return out
 
 
+def _tier_worst_edge(fabric):
+    """Yield (tier, bandwidth, latency) for each non-empty tier: the tier's
+    minimum edge bandwidth and maximum edge latency — the conservative
+    representative both the closed-form and emergent per-tier verdicts are
+    judged at, so they can't diverge."""
+    for t in fabric.tiers():
+        edges = fabric.tier_edges(t)
+        if edges:
+            yield (t, min(fabric.edge(*e).bw for e in edges),
+                   max(fabric.edge(*e).latency for e in edges))
+
+
+def fcr_per_tier(fabric, s: float, b: float, c: float) -> dict:
+    """Closed-form FCR (Eq. 2) per fabric *tier*: for each tier (ICI ring /
+    DCN gateway hops of a `PodFabric`) evaluate `fcr` at the tier's worst
+    (minimum-bandwidth) edge. A tier's checkpoint traffic is free iff its
+    value >= 1, so on a hierarchical fabric the instant checkpoint can be
+    free on the ICI tier while the same volume would be exposed on DCN —
+    exactly why tier-aware stream placement keeps instant shards on ICI and
+    spills only slack-tolerant artifacts to DCN. Eq. 2 has no latency
+    term; `fcr_hidden_per_tier` (emergent) accounts for it."""
+    return {t: fcr(s, b, v, c) for t, v, _ in _tier_worst_edge(fabric)}
+
+
+def fcr_hidden_per_tier(fabric, s: float, b: float, c: float,
+                        phi: float = 1e9, *, iters: int = 3,
+                        quantum: float = 4 << 20,
+                        train_traffic=()) -> dict:
+    """Per-tier FCR hiding verdict, emergent from the transport: every tier
+    is judged by its worst edge's `fcr_hidden_emergent` run, including the
+    tier's delivery latency (a DCN chunk lands `latency` seconds after
+    transmission ends, so a tier can be exposed even when Eq. 2 says
+    free). On an idle zero-latency fabric this reduces exactly to
+    ``fcr_per_tier(...) >= 1`` tier by tier (the closed form); with
+    `train_traffic` sharing the links, hiding demands genuine surplus on
+    that tier."""
+    return {t: fcr_hidden_emergent(s, b, v, c, phi, iters=iters,
+                                   quantum=quantum, latency=lat,
+                                   train_traffic=train_traffic)
+            for t, v, lat in _tier_worst_edge(fabric)}
+
+
 def fcr_hidden_per_edge(topology, s: float, b: float, c: float,
                         phi: float = 1e9, *, iters: int = 3,
                         quantum: float = 4 << 20,
@@ -80,31 +122,37 @@ def fcr_hidden_per_edge(topology, s: float, b: float, c: float,
     extra = edge_train_traffic or {}
     out = {}
     for e in topology.edges():
-        v_edge = topology.edge(*e).bw
+        sched = topology.edge(*e)
         traffic = list(train_traffic) + list(extra.get(e, ()))
-        out[e] = fcr_hidden_emergent(s, b, v_edge, c, phi, iters=iters,
-                                     quantum=quantum, train_traffic=traffic)
+        out[e] = fcr_hidden_emergent(s, b, sched.bw, c, phi, iters=iters,
+                                     quantum=quantum, latency=sched.latency,
+                                     train_traffic=traffic)
     return out
 
 
 def fcr_hidden_emergent(s: float, b: float, v: float, c: float,
                         phi: float = 1e9, *, iters: int = 3,
-                        quantum: float = 4 << 20,
+                        quantum: float = 4 << 20, latency: float = 0.0,
                         train_traffic=()) -> bool:
     """The FCR hiding condition, EMERGENT from the StateStream transport
     instead of Eq. 2: drive each iteration's razor checkpoint (12·φ bytes of
     chunked STATE traffic) through a TRAIN/STATE link scheduler between
     compute boundaries T_c = 6·s·b·φ/C apart, and report whether every
-    iteration's chunks drained before the next boundary.
+    iteration's chunks drained before the next boundary. `latency`
+    (seconds) is the link's delivery latency: the last chunk lands that
+    much after its transmission ends, so a high-latency link can be
+    exposed even when Eq. 2 says free.
 
-    On a dedicated backup link this reduces exactly to `is_free` (FCR >= 1);
-    with `train_traffic` sharing the link — (t, bytes) pairs — hiding demands
-    genuine surplus capacity, which no closed form captures."""
+    On a dedicated zero-latency backup link this reduces exactly to
+    `is_free` (FCR >= 1); with `train_traffic` sharing the link — (t,
+    bytes) pairs — hiding demands genuine surplus capacity, which no
+    closed form captures."""
     from repro.core.lccl import LinkScheduler, submit_chunked
 
     t_c = 6.0 * s * b * phi / c
     ckpt_bytes = 12.0 * phi
-    sched = LinkScheduler(v, quantum=min(quantum, max(ckpt_bytes, 1.0)))
+    sched = LinkScheduler(v, quantum=min(quantum, max(ckpt_bytes, 1.0)),
+                          latency=latency)
     per_iter: List[List] = []
     for i in range(iters):
         per_iter.append(submit_chunked(sched, "STATE", ckpt_bytes, i * t_c))

@@ -16,6 +16,23 @@ transfers from the paper is:
   * TRAIN/STATE two-queue link scheduling (§5.3): TRAIN preempts; STATE moves
     only when the link is idle.
 
+The link model grows in layers, matching real cluster fabrics:
+
+  * `LinkScheduler`  — one link: two queues, TRAIN preempts STATE, optional
+    per-transfer delivery latency.
+  * `LinkTopology`   — a graph of per-edge schedulers (flat ring or full
+    mesh): per-edge contention, dark nodes/edges, BFS live-path routing,
+    store-and-forward multi-hop items, and bidirectional (edge-disjoint)
+    path splitting by residual bandwidth.
+  * `PodFabric`      — the hierarchical tier: nodes grouped into pods, each
+    pod an ICI ring at full link bandwidth, pods joined by lower-bandwidth /
+    higher-latency DCN gateway edges. Failure *storms* (`inject_storm`)
+    darken correlated pods/edges from a seed, so recovery has to race around
+    a darkened pod over DCN.
+
+Units, everywhere in this module: bandwidths are **bytes/second**, sizes are
+**bytes**, times and latencies are **seconds** on the simulation clock.
+
 These are real data structures measured by benchmarks (fig8/fig10) and driven
 by the failover runtime.
 """
@@ -129,14 +146,24 @@ class LinkScheduler:
     interrupted by an arriving TRAIN transfer is aborted and retried once the
     link is idle again.
 
+    `bandwidth` is bytes/second; `quantum` is the STATE preemption grain in
+    bytes; `latency` (seconds) is the per-transfer delivery delay: a transfer
+    occupies the link for ``size / bandwidth`` seconds and its receiver sees
+    it ``latency`` seconds after transmission ends (`t_finish` includes the
+    latency; link occupancy does not). Chunks of one stream pipeline on a
+    link, so a chunked artifact pays the latency once per *hop*, not once
+    per chunk.
+
     The simulation clock (`now`) persists across `run(until=...)` calls, and a
     partially-transferred STATE item (`_rem`/`_rem_bytes`) is carried over, so
     a scheduler can be advanced incrementally — e.g. one training iteration at
     a time — and residual state resumes exactly where it left off."""
 
-    def __init__(self, bandwidth: float, quantum: float = 1 << 20):
+    def __init__(self, bandwidth: float, quantum: float = 1 << 20,
+                 latency: float = 0.0):
         self.bw = bandwidth
         self.quantum = quantum
+        self.latency = latency
         self.now = 0.0
         self.done: List[Transfer] = []
         self.n_finished = 0            # survives done-list pruning
@@ -144,18 +171,22 @@ class LinkScheduler:
         self._state: List[Transfer] = []
         self._rem: Optional[Transfer] = None   # STATE mid-flight across runs
         self._rem_bytes = 0.0
-        self._last_finish = 0.0
+        self._last_finish = 0.0        # last TRANSMISSION end (no latency)
 
     def submit(self, kind: str, size: float, t: float) -> Transfer:
         tr = Transfer(kind, size, t)
         (self._train if kind == "TRAIN" else self._state).append(tr)
         return tr
 
-    def _finish(self, tr: Transfer) -> None:
+    def _finish(self, tr: Transfer, tx_end: float) -> None:
+        """Mark `tr` delivered: transmission ended at `tx_end`; the receiver
+        sees it `latency` seconds later (`t_finish`). The link itself is free
+        again at `tx_end`, so only transmission time gates later transfers."""
+        tr.t_finish = tx_end + self.latency
         tr.finished = True
         self.done.append(tr)
         self.n_finished += 1
-        self._last_finish = max(self._last_finish, tr.t_finish)
+        self._last_finish = max(self._last_finish, tx_end)
 
     @property
     def idle(self) -> bool:
@@ -188,8 +219,7 @@ class LinkScheduler:
                 dt = tr.size / self.bw
                 t = tr.t_start + dt
                 busy += dt
-                tr.t_finish = t
-                self._finish(tr)
+                self._finish(tr, tx_end=t)
                 continue
             # link idle for TRAIN: advance STATE by one quantum
             nxt_t = min((x.t_submit for x in pend_t), default=float("inf"))
@@ -199,8 +229,7 @@ class LinkScheduler:
                 rem_bytes = rem_s.size
             if rem_s is not None:
                 if rem_bytes <= 0:          # zero-byte transfer: instant
-                    rem_s.t_finish = t
-                    self._finish(rem_s)
+                    self._finish(rem_s, tx_end=t)
                     rem_s = None
                     continue
                 chunk = min(self.quantum, rem_bytes)
@@ -212,8 +241,7 @@ class LinkScheduler:
                 busy += dt
                 rem_bytes -= chunk
                 if rem_bytes <= 0:
-                    rem_s.t_finish = t
-                    self._finish(rem_s)
+                    self._finish(rem_s, tx_end=t)
                     rem_s = None
                 continue
             # nothing runnable: jump to next submission
@@ -252,9 +280,14 @@ class LinkScheduler:
 
 
 # --------------------------------------------------------------------------- #
-# Per-link topology: one LinkScheduler per edge (ISSUE 2 tentpole)
+# Per-link topology: one LinkScheduler per edge (ISSUE 2 tentpole), grown
+# into a hierarchical pod fabric with edge tiers + latency (ISSUE 3)
 # --------------------------------------------------------------------------- #
 Edge = Tuple[int, int]
+
+# edge tiers: ICI = intra-pod ring link, DCN = inter-pod gateway hop
+TIER_ICI = "ici"
+TIER_DCN = "dcn"
 
 
 def edge_key(u: int, v: int) -> Edge:
@@ -284,17 +317,22 @@ class PathTransfer:
 
 
 class LinkTopology:
-    """A graph of per-edge `LinkScheduler`s replacing the PR-1 global link.
+    """A graph of per-edge `LinkScheduler`s — the cluster fabric.
 
     * ``kind="ring"``: edge (i, i+1 mod n) for every i — the DP-ring fabric
       the paper's neighbor shards and allreduce actually use.
     * ``kind="full"``: every pair — an idealized fully-connected fabric.
+    * `PodFabric` (subclass) builds the hierarchical tier: per-pod ICI rings
+      joined by DCN gateway edges.
 
-    Each edge is an independent TRAIN/STATE two-queue scheduler, so
-    contention is per-edge instead of uniformly smeared: a saturated hotspot
-    edge delays only the streams routed across it. A failed node's incident
-    edges go dark (``fail_node``) and ``path`` routes around them; individual
-    edges can also be failed (``fail_edge``) to force multi-hop detours.
+    Each edge is an independent TRAIN/STATE two-queue scheduler with its own
+    bandwidth (bytes/s) and delivery latency (seconds), so contention is
+    per-edge instead of uniformly smeared: a saturated hotspot edge delays
+    only the streams routed across it. Every edge carries a *tier* tag
+    (``TIER_ICI`` / ``TIER_DCN``); a flat topology is all-ICI. A failed
+    node's incident edges go dark (``fail_node``) and ``path`` routes around
+    them; individual edges can also be failed (``fail_edge``) to force
+    multi-hop detours.
 
     Multi-hop items move store-and-forward: a chunk fully crosses one edge,
     then is submitted on the next at its arrival time (``_pump``). Within a
@@ -304,21 +342,36 @@ class LinkTopology:
 
     def __init__(self, n: int, bandwidth: float, quantum: float = 1 << 20,
                  kind: str = "ring",
-                 edge_bw: Optional[Dict[Edge, float]] = None):
+                 edge_bw: Optional[Dict[Edge, float]] = None,
+                 latency: float = 0.0,
+                 edge_latency: Optional[Dict[Edge, float]] = None):
         assert kind in ("ring", "full"), kind
         assert n >= 1
-        self.n = n
         self.kind = kind
-        self.default_bw = bandwidth
-        self.quantum = quantum
         if kind == "ring":
             edges = {edge_key(i, (i + 1) % n) for i in range(n)} if n > 1 \
                 else set()
         else:
             edges = {(i, j) for i in range(n) for j in range(i + 1, n)}
+        self._init_fabric(n, edges, {e: TIER_ICI for e in edges}, bandwidth,
+                          quantum, edge_bw, latency, edge_latency)
+
+    def _init_fabric(self, n: int, edges, tiers: Dict[Edge, str],
+                     default_bw: float, quantum: float,
+                     edge_bw: Optional[Dict[Edge, float]],
+                     default_latency: float,
+                     edge_latency: Optional[Dict[Edge, float]]) -> None:
+        """Shared constructor core: one `LinkScheduler` per edge, with
+        per-edge bandwidth (bytes/s), latency (s), and tier tag."""
+        self.n = n
+        self.default_bw = default_bw
+        self.quantum = quantum
         bw = dict(edge_bw or {})
+        lat = dict(edge_latency or {})
+        self.edge_tier: Dict[Edge, str] = dict(tiers)
         self.links: Dict[Edge, LinkScheduler] = {
-            e: LinkScheduler(bw.get(e, bandwidth), quantum=quantum)
+            e: LinkScheduler(bw.get(e, default_bw), quantum=quantum,
+                             latency=lat.get(e, default_latency))
             for e in sorted(edges)}
         self.dark_nodes: set = set()
         self.dark_edges: set = set()
@@ -327,6 +380,16 @@ class LinkTopology:
     # ------------------------- graph queries ------------------------- #
     def edges(self) -> List[Edge]:
         return list(self.links)
+
+    def tier(self, u: int, v: int) -> str:
+        """Tier tag of edge (u, v): TIER_ICI or TIER_DCN."""
+        return self.edge_tier[edge_key(u, v)]
+
+    def tier_edges(self, tier: str) -> List[Edge]:
+        return [e for e, t in self.edge_tier.items() if t == tier]
+
+    def tiers(self) -> List[str]:
+        return sorted(set(self.edge_tier.values()))
 
     def edge(self, u: int, v: int) -> LinkScheduler:
         return self.links[edge_key(u, v)]
@@ -365,10 +428,23 @@ class LinkTopology:
         self.dark_edges.discard(edge_key(u, v))
 
     # ------------------------- routing ------------------------- #
-    def path(self, src: int, dst: int) -> List[Edge]:
+    def path(self, src: int, dst: int,
+             blocked: Optional[set] = None) -> List[Edge]:
         """Shortest live path src -> dst (BFS), as a list of edges. The
         endpoints are assumed up (a recovering node's pod is created before
-        its state streams); intermediate dark nodes/edges are routed around."""
+        its state streams); intermediate dark nodes/edges are routed around.
+        `blocked` adds extra edges to avoid (used for edge-disjoint
+        alternate paths)."""
+        p = self._bfs(src, dst, blocked or set())
+        if p is None:
+            raise RuntimeError(
+                f"no live path {src} -> {dst} "
+                f"(dark nodes {sorted(self.dark_nodes)}, "
+                f"dark edges {sorted(self.dark_edges)})")
+        return p
+
+    def _bfs(self, src: int, dst: int, blocked: set
+             ) -> Optional[List[Edge]]:
         if src == dst:
             return []
         prev: Dict[int, int] = {src: src}
@@ -377,7 +453,8 @@ class LinkTopology:
             nxt = []
             for u in frontier:
                 for a, b in self.links:
-                    if edge_key(a, b) in self.dark_edges:
+                    e = edge_key(a, b)
+                    if e in self.dark_edges or e in blocked:
                         continue
                     for x, y in ((a, b), (b, a)):
                         if x != u or y in prev:
@@ -392,10 +469,7 @@ class LinkTopology:
                         nxt.append(y)
             frontier = nxt
         if dst not in prev:
-            raise RuntimeError(
-                f"no live path {src} -> {dst} "
-                f"(dark nodes {sorted(self.dark_nodes)}, "
-                f"dark edges {sorted(self.dark_edges)})")
+            return None
         hops = []
         node = dst
         while node != src:
@@ -403,18 +477,88 @@ class LinkTopology:
             node = prev[node]
         return hops[::-1]
 
+    def disjoint_paths(self, src: int, dst: int, k: int = 2
+                       ) -> List[List[Edge]]:
+        """Up to `k` edge-disjoint live paths src -> dst, shortest first.
+
+        On a ring these are exactly the two directions around it; on a
+        `PodFabric` the second path detours the pod-level gateway ring the
+        other way. The bidirectional routing policy splits a stream's bytes
+        across these by residual bandwidth (`split_bytes`)."""
+        paths: List[List[Edge]] = []
+        blocked: set = set()
+        for _ in range(max(k, 1)):
+            p = self._bfs(src, dst, blocked)
+            if p is None:
+                break
+            paths.append(p)
+            if not p:                   # src == dst: nothing to disjoin
+                break
+            blocked |= set(p)
+        return paths
+
+    def split_bytes(self, paths: Sequence[Sequence[Edge]], nbytes: float
+                    ) -> List[float]:
+        """Divide `nbytes` across `paths` so all directions finish together.
+
+        Each path is modeled as a pipe of rate ``r`` (its bottleneck edge's
+        bandwidth, bytes/s) that only starts delivering after an offset ``c``
+        (seconds): the worst per-edge queued backlog on the path plus the
+        path's summed delivery latency. Water-filling solves
+        ``sum_i r_i * max(0, T - c_i) = nbytes`` for the common finish time
+        T; the returned byte shares are ``r_i * max(0, T - c_i)``. On an
+        idle symmetric ring the two directions get exactly half each — the
+        bidirectional split that halves recovery time."""
+        assert paths, "split_bytes needs at least one path"
+        infos = []
+        for p in paths:
+            if not p:                   # local delivery: infinite rate
+                return [nbytes] + [0.0] * (len(paths) - 1)
+            r = min(self.links[e].bw for e in p)
+            backlog = max(self.links[e].pending_bytes() / self.links[e].bw
+                          for e in p)
+            lat = sum(self.links[e].latency for e in p)
+            infos.append((r, backlog + lat))
+        order = sorted(range(len(infos)), key=lambda i: infos[i][1])
+        finish = None
+        active = 0
+        for m in range(1, len(order) + 1):
+            rs = sum(infos[i][0] for i in order[:m])
+            cs = sum(infos[i][0] * infos[i][1] for i in order[:m])
+            t = (nbytes + cs) / rs
+            nxt = infos[order[m]][1] if m < len(order) else float("inf")
+            if t <= nxt:
+                finish, active = t, m
+                break
+        assert finish is not None
+        shares = [0.0] * len(paths)
+        for i in order[:active]:
+            r, c = infos[i]
+            shares[i] = r * max(0.0, finish - c)
+        # rounding guard: shares must sum to exactly nbytes
+        drift = nbytes - sum(shares)
+        shares[order[0]] += drift
+        return shares
+
     def least_loaded_edge(self, kind: Optional[str] = None) -> Edge:
-        """The live edge with the least queued bytes — where full/lazy
-        checkpoint streams go so they stay off busy training edges."""
+        """The live edge with the least queued *drain seconds*
+        (queued bytes / bandwidth; faster edge wins ties) — where full
+        checkpoint streams go so they stay off busy training edges. On a
+        `PodFabric` this is tier-aware placement: an idle ICI edge beats an
+        idle DCN edge, but once the ICI ring is saturated with TRAIN backlog
+        the slack DCN tier wins."""
         live = self.live_edges()
         if not live:
             raise RuntimeError("no live edges in the topology")
-        return min(live, key=lambda e: (self.links[e].pending_bytes(kind), e))
+        return min(live, key=lambda e: (
+            self.links[e].pending_bytes(kind) / self.links[e].bw,
+            1.0 / self.links[e].bw, e))
 
     # ------------------------- submission ------------------------- #
     def submit_path(self, kind: str, size: float, t: float,
                     path: Sequence[Edge]) -> PathTransfer:
-        """Put one item on an edge path. Empty path = local delivery."""
+        """Put one `size`-byte item on an edge path at simulation time `t`
+        (seconds). Empty path = local delivery."""
         pt = PathTransfer(kind, size, t, tuple(edge_key(*e) for e in path))
         if not pt.path:
             pt.finished = True
@@ -435,6 +579,22 @@ class LinkTopology:
         preemption is per-edge instead of smeared over a global link."""
         return [sch.submit("TRAIN", nbytes_per_edge, t)
                 for e, sch in self.links.items() if self.edge_up(*e)]
+
+    def submit_train_tiers(self, tier_bytes: Dict[str, float], t: float
+                           ) -> List[Transfer]:
+        """One step's hierarchical-allreduce volume: each live edge carries
+        its TIER's per-edge wire bytes (`tier_bytes[TIER_ICI]` for the
+        intra-pod reduce-scatter + allgather, `tier_bytes[TIER_DCN]` for the
+        inter-pod shard allreduce over the gateway ring). Tiers absent from
+        `tier_bytes`, or mapped to 0 bytes, submit nothing."""
+        out = []
+        for e, sch in self.links.items():
+            if not self.edge_up(*e):
+                continue
+            nbytes = tier_bytes.get(self.edge_tier[e], 0.0)
+            if nbytes > 0:
+                out.append(sch.submit("TRAIN", nbytes, t))
+        return out
 
     # ------------------------- simulation ------------------------- #
     def _pump(self) -> int:
@@ -487,6 +647,145 @@ class LinkTopology:
         raise RuntimeError("LinkTopology.drain did not converge")
 
 
+# --------------------------------------------------------------------------- #
+# Hierarchical pod fabric: ICI rings × DCN gateway hops (ISSUE 3 tentpole)
+# --------------------------------------------------------------------------- #
+class PodFabric(LinkTopology):
+    """Hierarchical, heterogeneous fabric: `n_pods` pods of `pod_size` nodes.
+
+    Node ``p * pod_size + i`` is node `i` of pod `p`. Inside each pod the
+    nodes form an ICI ring at `ici_bw` bytes/s (the fast tier); node 0 of
+    each pod is its *gateway*, and the gateways form a pod-level ring of DCN
+    edges at `dcn_bw` bytes/s (the slow tier) with per-edge delivery latency
+    `dcn_latency` seconds. Cross-pod traffic therefore rides
+    ICI -> gateway -> DCN -> gateway -> ICI, store-and-forward, and a
+    darkened pod forces DCN detours the other way around the gateway ring.
+
+    ``edge_bw`` / ``edge_latency`` override individual edges (hotspots);
+    `fail_pod` darkens every node of a pod at once (`inject_storm` drives
+    correlated failures from a seed)."""
+
+    def __init__(self, n_pods: int, pod_size: int, ici_bw: float,
+                 dcn_bw: float, *, quantum: float = 1 << 20,
+                 ici_latency: float = 0.0, dcn_latency: float = 0.0,
+                 edge_bw: Optional[Dict[Edge, float]] = None,
+                 edge_latency: Optional[Dict[Edge, float]] = None):
+        assert n_pods >= 1 and pod_size >= 1
+        self.kind = "pods"
+        self.n_pods = n_pods
+        self.pod_size = pod_size
+        self.ici_bw = ici_bw
+        self.dcn_bw = dcn_bw
+        self.ici_latency = ici_latency
+        self.dcn_latency = dcn_latency
+        tiers: Dict[Edge, str] = {}
+        for p in range(n_pods):
+            base = p * pod_size
+            if pod_size > 1:
+                for i in range(pod_size if pod_size > 2 else 1):
+                    e = edge_key(base + i, base + (i + 1) % pod_size)
+                    tiers[e] = TIER_ICI
+        if n_pods > 1:
+            for p in range(n_pods if n_pods > 2 else 1):
+                e = edge_key(self.gateway(p),
+                             self.gateway((p + 1) % n_pods))
+                tiers[e] = TIER_DCN
+        bw = {e: (ici_bw if t == TIER_ICI else dcn_bw)
+              for e, t in tiers.items()}
+        bw.update(edge_bw or {})
+        lat = {e: (ici_latency if t == TIER_ICI else dcn_latency)
+               for e, t in tiers.items()}
+        lat.update(edge_latency or {})
+        self._init_fabric(n_pods * pod_size, set(tiers), tiers, ici_bw,
+                          quantum, bw, 0.0, lat)
+
+    # ------------------------- pod queries ------------------------- #
+    def pod_of(self, node: int) -> int:
+        return node // self.pod_size
+
+    def pod_nodes(self, pod: int) -> List[int]:
+        base = pod * self.pod_size
+        return list(range(base, base + self.pod_size))
+
+    def gateway(self, pod: int) -> int:
+        """The pod's DCN-attached node (node 0 of the pod)."""
+        return pod * self.pod_size
+
+    # ------------------------- failure state ------------------------- #
+    def fail_pod(self, pod: int) -> None:
+        """Darken the whole pod: every node (and so every incident ICI and
+        DCN edge) goes dark — the correlated failure domain the ByteDance
+        robustness report stresses."""
+        for node in self.pod_nodes(pod):
+            self.fail_node(node)
+
+    def restore_pod(self, pod: int) -> None:
+        for node in self.pod_nodes(pod):
+            self.restore_node(node)
+
+    def dark_pods(self) -> List[int]:
+        """Pods with every node dark."""
+        return [p for p in range(self.n_pods)
+                if all(n in self.dark_nodes for n in self.pod_nodes(p))]
+
+
+@dataclass(frozen=True)
+class StormReport:
+    """What a seeded failure storm darkened."""
+    seed: int
+    pods: Tuple[int, ...]              # fully-darkened pods
+    nodes: Tuple[int, ...]             # every darkened node
+    edges: Tuple[Edge, ...]            # extra correlated edge failures
+
+
+def inject_storm(fabric: LinkTopology, seed: int, *, pods: int = 1,
+                 edge_failures: int = 0) -> StormReport:
+    """Correlated failure storm, reproducible from `seed`.
+
+    Picks `pods` distinct victim pods (uniformly, without replacement) and
+    darkens each whole pod; then fails `edge_failures` extra live edges,
+    preferring edges *incident to the victim pods' gateway neighbors* — the
+    blast radius of a ToR/fabric event is spatially clustered, so recovery
+    traffic must race around the darkened region over the surviving DCN
+    hops. On a flat `LinkTopology` (no pods), `pods` is ignored and the
+    storm is `edge_failures` clustered edge failures around a random seed
+    edge."""
+    rng = np.random.default_rng(seed)
+    dark_before = set(fabric.dark_nodes)
+    hit_pods: List[int] = []
+    if isinstance(fabric, PodFabric) and pods > 0:
+        avail = [p for p in range(fabric.n_pods)
+                 if p not in fabric.dark_pods()]
+        take = min(pods, len(avail))
+        hit_pods = sorted(int(p) for p in
+                          rng.choice(avail, size=take, replace=False))
+        for p in hit_pods:
+            fabric.fail_pod(p)
+    hit_nodes = sorted(set(fabric.dark_nodes) - dark_before)
+    # correlated extra edge failures: rank live edges by graph distance to
+    # the storm center and knock out the nearest ones
+    hit_edges: List[Edge] = []
+    live = fabric.live_edges()
+    if edge_failures > 0 and live:
+        if hit_pods and isinstance(fabric, PodFabric):
+            center = {fabric.gateway((p + d) % fabric.n_pods)
+                      for p in hit_pods for d in (-1, 1)}
+        else:
+            seed_edge = live[int(rng.integers(len(live)))]
+            center = set(seed_edge)
+        def dist(e: Edge) -> Tuple[int, Edge]:
+            # modular node distance, so ring-wraparound edges count as
+            # close to a blast at the seam
+            d = min(min(abs(x - c), fabric.n - abs(x - c))
+                    for x in e for c in center) if center else 0
+            return (d, e)
+        for e in sorted(live, key=dist)[:edge_failures]:
+            fabric.fail_edge(*e)
+            hit_edges.append(e)
+    return StormReport(seed, tuple(hit_pods), tuple(hit_nodes),
+                       tuple(hit_edges))
+
+
 def submit_chunked_path(topo: LinkTopology, kind: str, nbytes: float,
                         t: float, path: Sequence[Edge],
                         quantum: Optional[float] = None) -> List[PathTransfer]:
@@ -520,7 +819,9 @@ def submit_chunked(sched: LinkScheduler, kind: str, nbytes: float, t: float,
 def ring_allreduce_time(size_bytes: float, n: int, bandwidth: float,
                         latency: float = 15e-6, efficiency: float = 1.0
                         ) -> float:
-    """Ring allreduce wall time: 2(n-1)/n * size / (BW*eff) + 2(n-1)*lat."""
+    """Ring allreduce wall time (seconds): `size_bytes` bytes over an
+    n-node ring at `bandwidth` bytes/s with per-message `latency` seconds:
+    2(n-1)/n * size / (BW*eff) + 2(n-1)*lat."""
     if n <= 1:
         return 0.0
     steps = 2 * (n - 1)

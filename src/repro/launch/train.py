@@ -33,12 +33,25 @@ def main() -> None:
     ap.add_argument("--topology", choices=("ring", "full"), default="ring",
                     help="per-link fabric shape (one scheduler per edge)")
     ap.add_argument("--link-bw", type=float, default=50e9,
-                    help="default per-edge bandwidth, bytes/s")
+                    help="default per-ICI-edge bandwidth, bytes/s")
     ap.add_argument("--hotspot-edge", type=int, nargs=2, default=None,
                     metavar=("U", "V"),
                     help="ring edge to throttle (asymmetric-bandwidth run)")
     ap.add_argument("--hotspot-bw", type=float, default=5e9,
                     help="bandwidth of the hotspot edge, bytes/s")
+    ap.add_argument("--pods", type=int, default=1,
+                    help="group the dp workers into this many pods: per-pod "
+                         "ICI rings joined by a DCN gateway ring")
+    ap.add_argument("--dcn-bw", type=float, default=5e9,
+                    help="inter-pod (DCN) edge bandwidth, bytes/s")
+    ap.add_argument("--edge-latency", type=float, default=1e-3,
+                    help="per-DCN-hop delivery latency, seconds")
+    ap.add_argument("--storm", type=int, default=None, metavar="SEED",
+                    help="at --inject-failure, unleash a seeded correlated "
+                         "failure storm (darkens a whole pod + nearby "
+                         "edges) instead of a single-worker failure")
+    ap.add_argument("--storm-edge-failures", type=int, default=1,
+                    help="extra correlated edge failures in the storm")
     args = ap.parse_args()
 
     from repro.configs import get_arch, reduce_for_smoke
@@ -60,17 +73,32 @@ def main() -> None:
         seq_len=args.seq_len, ckpt_dir=Path(args.ckpt_dir),
         full_every=args.full_every, link_bw=args.link_bw,
         topology=args.topology, edge_bw=edge_bw,
+        pods=args.pods, dcn_bw=args.dcn_bw, dcn_latency=args.edge_latency,
         hp=AdamWConfig(warmup_steps=5, total_steps=max(args.steps, 10)))
 
     t0 = time.time()
     for step in range(args.steps):
         if args.inject_failure is not None and step == args.inject_failure:
-            print(f"[failover] injecting failure at step {step}")
-            clu.inject_failure([1], hardware=args.hardware_failure)
-            rep = clu.recover(hardware=args.hardware_failure)
-            print(f"[failover] recovered from {rep.recovered_from} in "
-                  f"{rep.total_time:.1f}s (modeled), rollback="
-                  f"{rep.rolled_back_iterations} iterations")
+            if args.storm is not None:
+                storm = clu.inject_storm(
+                    args.storm, pods=1,
+                    edge_failures=args.storm_edge_failures)
+                print(f"[failover] storm seed={storm.seed}: darkened pods "
+                      f"{list(storm.pods)}, extra dark edges "
+                      f"{list(storm.edges)}")
+            else:
+                print(f"[failover] injecting failure at step {step}")
+                clu.inject_failure([1], hardware=args.hardware_failure)
+            if any(not w.alive for w in clu.workers):
+                rep = clu.recover(hardware=args.hardware_failure)
+                print(f"[failover] recovered from {rep.recovered_from} in "
+                      f"{rep.total_time:.1f}s (modeled), rollback="
+                      f"{rep.rolled_back_iterations} iterations")
+            else:
+                # a flat-fabric storm only darkens edges (no pods to kill):
+                # training continues, streams route around the damage
+                print("[failover] storm killed no workers; training on "
+                      "through the degraded fabric")
         loss = clu.step()
         if step % 5 == 0 or step == args.steps - 1:
             print(f"step {clu.iteration:4d} loss {loss:.4f} "
@@ -84,10 +112,20 @@ def main() -> None:
     for e, sch in sorted(clu.topology.links.items()):
         hid = clu.edge_instant_hidden.get(e, 0)
         exp = clu.edge_instant_exposed.get(e, 0)
-        print(f"  edge {e[0]}-{e[1]}: bw {sch.bw / 1e9:.1f} GB/s, "
+        print(f"  edge {e[0]}-{e[1]} [{clu.topology.tier(*e)}]: "
+              f"bw {sch.bw / 1e9:.1f} GB/s, "
+              f"lat {sch.latency * 1e3:.2f} ms, "
               f"state hidden {hid} exposed {exp}, "
               f"TRAIN+STATE transfers {sch.n_finished} pending "
               f"{sch.pending_bytes() / 1e6:.1f} MB")
+    # per-tier rollup: where the fabric's surplus capacity actually went
+    from repro.core.lccl import PodFabric
+    if isinstance(clu.topology, PodFabric):
+        for tier in clu.topology.tiers():
+            edges = clu.topology.tier_edges(tier)
+            moved = sum(clu.topology.edge(*e).n_finished for e in edges)
+            print(f"  tier {tier}: {len(edges)} edges, "
+                  f"{moved} transfers completed")
 
 
 if __name__ == "__main__":

@@ -34,7 +34,8 @@ from repro.configs import ArchConfig
 from repro.core.consistency import reconcile
 from repro.core.controller import StateController
 from repro.core.detection import DetectionTimeline
-from repro.core.lccl import Edge, LinkTopology, edge_key
+from repro.core.lccl import (Edge, LinkTopology, PodFabric, StormReport,
+                             edge_key, inject_storm)
 from repro.data.indexer import TidIndexer
 from repro.data.loader import PrefetchingLoader, SyntheticTokens
 from repro.models import build_model
@@ -102,7 +103,9 @@ class SimCluster:
                  full_every: int = 50, seed: int = 0,
                  link_bw: float = 50e9, quantum: int = DEFAULT_QUANTUM,
                  t_iter_model: float = 0.05, topology: str = "ring",
-                 edge_bw: Optional[Dict[Edge, float]] = None):
+                 edge_bw: Optional[Dict[Edge, float]] = None,
+                 pods: int = 1, dcn_bw: float = 5e9,
+                 ici_latency: float = 0.0, dcn_latency: float = 0.0):
         self.cfg = cfg
         self.dp = dp
         self.active_dp = dp
@@ -118,18 +121,30 @@ class SimCluster:
         self.source = SyntheticTokens(dataset_size, seq_len, cfg.vocab_size,
                                       seed=seed)
         self.detection = DetectionTimeline()
-        # per-link fabric: one LinkScheduler per ring edge. The train loop's
-        # allreduce volume loads every edge (TRAIN); each checkpoint artifact
-        # rides its routed edge path (STATE chunks), so TRAIN/STATE
-        # contention is per-edge instead of smeared over one global link
+        # per-link fabric: one LinkScheduler per edge. The train loop's
+        # allreduce volume loads every edge (TRAIN, per tier on a pod
+        # fabric); each checkpoint artifact rides its routed edge path
+        # (STATE chunks), so TRAIN/STATE contention is per-edge and per-tier
+        # instead of smeared over one global link. With `pods > 1` the dp
+        # workers are grouped into that many ICI rings joined by a DCN
+        # gateway ring (`PodFabric`) — cross-pod streams pay the DCN
+        # bandwidth and per-hop latency
         self.quantum = quantum
         self.link_bw = link_bw
         self.topology_kind = topology
         self.t_iter_model = t_iter_model
         self.sim_time = 0.0
-        self.topology = LinkTopology(dp, link_bw, quantum=quantum,
-                                     kind=topology, edge_bw=edge_bw)
+        self.pods = pods
+        self.dcn_bw = dcn_bw
+        self.ici_latency = ici_latency
+        self.dcn_latency = dcn_latency
+        if pods > 1 and dp % pods != 0:
+            raise ValueError(
+                f"pods={pods} must divide dp={dp} to build a PodFabric "
+                f"(every pod gets dp/pods workers)")
+        self.topology = self._build_fabric(dp, edge_bw)
         self.transport = TopologyTransport(self.topology)
+        self.last_storm: Optional[StormReport] = None
         self.instant_hidden = 0        # instant-ckpt drained within the iter
         self.instant_exposed = 0       # ... spilled past the boundary
         # per-edge view of the same condition (adjacent ring edge per worker)
@@ -158,6 +173,31 @@ class SimCluster:
         self.loss_history: List[float] = []
 
     # ------------------------------------------------------------------ #
+    def _build_fabric(self, dp: int,
+                      edge_bw: Optional[Dict[Edge, float]] = None
+                      ) -> LinkTopology:
+        """The fabric for `dp` workers: a flat ring/full mesh, or — when
+        `pods > 1` divides dp — a hierarchical `PodFabric` of ICI rings
+        joined by a DCN gateway ring. The constructor rejects a
+        non-dividing pod count; an elastic shrink that breaks divisibility
+        degrades to a flat ring with a warning."""
+        if self.pods > 1:
+            if dp % self.pods == 0 and dp // self.pods >= 1:
+                return PodFabric(self.pods, dp // self.pods, self.link_bw,
+                                 self.dcn_bw, quantum=self.quantum,
+                                 ici_latency=self.ici_latency,
+                                 dcn_latency=self.dcn_latency,
+                                 edge_bw=edge_bw)
+            import warnings
+            warnings.warn(
+                f"dp={dp} no longer divides into pods={self.pods} after "
+                f"rescale; the fabric degrades to a flat ring",
+                RuntimeWarning, stacklevel=2)
+        return LinkTopology(dp, self.link_bw, quantum=self.quantum,
+                            kind=self.topology_kind, edge_bw=edge_bw,
+                            latency=self.ici_latency)
+
+    # ------------------------------------------------------------------ #
     def _make_step(self):
         model, hp = self.model, self.hp
 
@@ -184,7 +224,7 @@ class SimCluster:
     def _shard_and_backup(self) -> None:
         """Instant checkpoint: split unique opt state into dp shards; worker
         (i+1) stores worker i's shard (the in-step ppermute, host view) AND
-        streams it as chunked STATE traffic on the shared link."""
+        streams it as chunked STATE traffic over its adjacent fabric edge."""
         vec, meta = _flatten_opt(self.state["opt"])
         self._opt_meta = meta
         slices = shard_slices(len(vec), self.dp)
@@ -200,11 +240,18 @@ class SimCluster:
             self.controller.report_ckpt(i, it)
 
     def step_traffic_profile(self):
-        """This step's wire volumes (train/step.py accounting)."""
+        """This step's wire volumes (train/step.py accounting). On a pod
+        fabric the allreduce is two-level: intra-pod ring volume per ICI
+        edge plus the inter-pod shard allreduce per DCN edge."""
         if self._grad_bytes is None:
             self._grad_bytes = float(sum(
                 int(np.prod(l.shape)) * 4
                 for l in jax.tree.leaves(self.state["params"])))
+        if isinstance(self.topology, PodFabric):
+            from repro.train.step import hierarchical_step_traffic
+            return hierarchical_step_traffic(self._grad_bytes,
+                                             self.topology.n_pods,
+                                             self.topology.pod_size)
         return step_traffic(self._grad_bytes, self.active_dp)
 
     def step(self) -> float:
@@ -227,9 +274,15 @@ class SimCluster:
         # advance the link model one modeled iteration; instant-ckpt chunks
         # that drain before the boundary were hidden (the FCR condition,
         # emergent from the transport instead of Eq. 2) — tracked globally
-        # and per adjacent ring edge
+        # and per adjacent ring edge. The window advances in sub-steps:
+        # store-and-forward items move one hop per run() window, so a
+        # cross-pod (multi-hop) instant stream needs several pump rounds to
+        # land within the iteration it was submitted in — without them the
+        # hidden/exposed verdict would be a windowing artifact
+        t_prev = self.sim_time
         self.sim_time += self.t_iter_model
-        self.transport.run(until=self.sim_time)
+        for k in range(1, 5):
+            self.transport.run(until=t_prev + self.t_iter_model * k / 4)
         tickets = []
         for w in self.workers[:self.active_dp]:
             tk = w.engine.last_instant_ticket
@@ -237,7 +290,17 @@ class SimCluster:
                 continue
             tickets.append(tk)
             src, dst = self.transport.instant_route(w.wid)
+            # book the verdict on the fabric edge that DELIVERS the shard
+            # (the last hop): on a pod fabric, consecutive wids across a pod
+            # boundary have no direct edge, so the raw (src, dst) pair would
+            # be a phantom key invisible to per-edge summaries
             e = edge_key(src, dst)
+            if e not in self.topology.links:
+                try:
+                    hops = self.topology.path(src, dst)
+                    e = hops[-1] if hops else e
+                except RuntimeError:
+                    pass               # mid-failure: keep the pair key
             book = (self.edge_instant_hidden if tk.complete
                     else self.edge_instant_exposed)
             book[e] = book.get(e, 0) + 1
@@ -268,6 +331,24 @@ class SimCluster:
                     self.workers[wid].engine.own)(2)
                 self.workers[wid].engine.neighbor = type(
                     self.workers[wid].engine.neighbor)(2)
+
+    def inject_storm(self, seed: int, *, pods: int = 1,
+                     edge_failures: int = 0) -> StormReport:
+        """Correlated failure storm, reproducible from `seed` (lccl
+        `inject_storm`): whole pods darken at once and every worker in them
+        dies (software — processes gone, host RAM survives), plus
+        `edge_failures` extra clustered edge failures. Storm-darkened EDGES
+        persist through `recover()` (only the failed workers' nodes relight
+        when their replacement pods come up), so recovery streams must race
+        around the damage — over the DCN gateway ring when a whole pod sits
+        between holder and newcomer."""
+        report = inject_storm(self.topology, seed, pods=pods,
+                              edge_failures=edge_failures)
+        for wid in report.nodes:
+            if wid < len(self.workers):
+                self.workers[wid].alive = False
+        self.last_storm = report
+        return report
 
     # ----------------------- shard layout plumbing ----------------------- #
     # Snapshots are sliced by the (dp, wid) numbering in force when they were
@@ -370,6 +451,13 @@ class SimCluster:
             self.workers[wid].host_alive = True
             self.controller.beat(wid)
             self.workers[wid].loader.repartition(self.active_dp)
+        # a completed recovery repairs the storm's fabric damage along with
+        # the pods: the recovery STREAMS had to race around the dark edges
+        # (DCN detours), but the healed job trains on a whole fabric again
+        if self.last_storm is not None:
+            for e in self.last_storm.edges:
+                self.topology.restore_edge(*e)
+            self.last_storm = None
         return report
 
     def _recover_from_neighbors(self, failed, timeline, hardware,
@@ -584,18 +672,22 @@ class SimCluster:
         for i, w in enumerate(self.workers):
             w.loader = PrefetchingLoader(self.source, self.indexer, i,
                                          self.active_dp)
-        # the fabric rescales with the job: fresh per-edge ring at the new
+        # the fabric rescales with the job: fresh per-edge fabric at the new
         # size; in-flight hops on the old fabric are lost (assemblers keep
         # their received chunks, so resumed recoveries only move `missing()`).
         # Surviving edges keep their configured bandwidth (hotspot edges stay
-        # throttled); newly-adjacent pairs get the default.
+        # throttled); newly-adjacent pairs get the default. A pod fabric is
+        # rebuilt at the same pod count while the shrunk dp still divides
+        # into it; otherwise it degrades to a flat ring (`_build_fabric`).
         kept_bw = {edge_key(wid_map[a], wid_map[b]): sch.bw
                    for (a, b), sch in self.topology.links.items()
                    if a in wid_map and b in wid_map}
-        self.topology = LinkTopology(self.dp, self.link_bw,
-                                     quantum=self.quantum,
-                                     kind=self.topology_kind,
-                                     edge_bw=kept_bw)
+        if isinstance(self.topology, PodFabric):
+            # renumbering reshuffles which pairs are ICI vs DCN: the rebuilt
+            # fabric's tier defaults are authoritative, old per-edge
+            # overrides would mislabel tier bandwidths
+            kept_bw = None
+        self.topology = self._build_fabric(self.dp, kept_bw)
         self.transport = TopologyTransport(self.topology)
         for w in self.workers:
             w.engine.transport = self.transport

@@ -16,6 +16,14 @@ scheduled per-edge instead: recovery rides a (possibly multi-hop) path of
 per-link schedulers while the allreduce loads every ring edge, so a single
 hotspot edge bottlenecks the timeline by exactly its residual bandwidth.
 
+On a hierarchical `PodFabric` the state leg can also be scheduled across
+SEVERAL edge-disjoint paths at once (`paths=`): the bytes are split by
+residual bandwidth (`LinkTopology.split_bytes`), so bidirectional ring
+routing — both directions around the ring, or both ways around the DCN
+gateway ring past a darkened pod — shows up in the timeline as the residual
+capacity of the two directions combined, and cross-pod recovery is bounded
+by DCN bandwidth plus the per-hop delivery latency.
+
 Orchestration steps we can only model (Docker pulls, pod scheduling) keep the
 paper's measured Table 5 values; connection building is calibrated on our
 lock-free init (fig8)."""
@@ -41,9 +49,11 @@ class FailoverCosts:
     detection_fft: float = 6.0
     pod_creation_fft: float = 7.0
     dependency_fft: float = 0.0
-    # bandwidths for state movement
+    # bandwidths for state movement (bytes/s)
     neighbor_bw: float = 50e9          # ICI link (instant ckpt fetch)
     storage_bw: float = 1e9            # remote storage (baseline reload)
+    dcn_bw: float = 5e9                # inter-pod gateway hop (cross-pod)
+    dcn_latency: float = 1e-3          # per-DCN-hop delivery latency (s)
     # network-recovery scaling (calibrated on our lock-free init, fig8)
     conn_base: float = 0.5
     conn_per_worker: float = 0.001
@@ -60,9 +70,12 @@ def schedule_state_phase(state_bytes: float, bandwidth: float, *,
                          t0: float = 0.0,
                          scheduler: Optional[LinkScheduler] = None,
                          topology: Optional[LinkTopology] = None,
-                         path: Optional[Sequence[Edge]] = None) -> float:
-    """Wall seconds to move `state_bytes` of recovery state through a
-    TRAIN/STATE link scheduler, chunked at `quantum` granularity.
+                         path: Optional[Sequence[Edge]] = None,
+                         paths: Optional[Sequence[Sequence[Edge]]] = None
+                         ) -> float:
+    """Wall seconds to move `state_bytes` (bytes) of recovery state through
+    a TRAIN/STATE link scheduler at `bandwidth` bytes/s, chunked at
+    `quantum` granularity (bytes).
 
     Any `train_traffic` submitted on the same link preempts the recovery
     chunks — the returned duration grows by exactly the schedule the link
@@ -72,12 +85,26 @@ def schedule_state_phase(state_bytes: float, bandwidth: float, *,
     move store-and-forward along the path's per-edge schedulers while the
     TRAIN traffic loads EVERY ring edge (the healthy groups' allreduce) —
     the timeline then derives from per-edge contention, and a single hotspot
-    edge on the path bottlenecks recovery by exactly its residual
-    bandwidth."""
+    edge on the path bottlenecks recovery by exactly its residual bandwidth.
+    Per-edge delivery latency accrues per hop, so a DCN detour pays its
+    latency on every gateway crossing.
+
+    `paths` (several edge-disjoint paths) enables bidirectional routing: the
+    volume is split across the paths by residual bandwidth
+    (`LinkTopology.split_bytes`), so on an idle symmetric ring both
+    directions carry half and the state leg halves."""
     if topology is not None:
-        assert path, "per-link scheduling needs an edge path"
-        pts = submit_chunked_path(topology, "STATE", state_bytes, t0, path,
-                                  quantum)
+        routes = [list(p) for p in paths] if paths else \
+            ([list(path)] if path else None)
+        assert routes, "per-link scheduling needs an edge path (or paths)"
+        shares = topology.split_bytes(routes, state_bytes) \
+            if len(routes) > 1 else [state_bytes]
+        pts = []
+        for p, share in zip(routes, shares):
+            if share <= 0:
+                continue
+            pts += submit_chunked_path(topology, "STATE", share, t0, p,
+                                       quantum)
         for t, nbytes in train_traffic:
             topology.submit_train_ring(nbytes, t)
         topology.drain()
@@ -96,13 +123,14 @@ def fftrainer_timeline(n_workers: int, state_bytes_per_worker: float,
                        train_traffic: TrainTraffic = (),
                        scheduler: Optional[LinkScheduler] = None,
                        topology: Optional[LinkTopology] = None,
-                       path: Optional[Sequence[Edge]] = None
+                       path: Optional[Sequence[Edge]] = None,
+                       paths: Optional[Sequence[Sequence[Edge]]] = None
                        ) -> Dict[str, float]:
     t_net = costs.conn_base + costs.conn_per_worker * n_workers
     t_state = costs.state_ramp_fft + schedule_state_phase(
         state_bytes_per_worker, costs.neighbor_bw, quantum=costs.quantum,
         train_traffic=train_traffic, scheduler=scheduler,
-        topology=topology, path=path)
+        topology=topology, path=path, paths=paths)
     tl = {
         # lower-bounded by our measured heartbeat path; paper measured 6 s
         "detection": max(detection.detection_time(), costs.detection_fft),

@@ -158,27 +158,55 @@ def _mask(tree: PyTree, mask_pspecs: PyTree) -> PyTree:
 
 # --------------------------------------------------------------------------- #
 # Link-traffic accounting (paper §5.3): what one training iteration puts on
-# the wire, per worker. The runtime submits `train_bytes` as TRAIN traffic to
-# the shared StateStream scheduler — the volume that preempts checkpoint
-# chunks — while the instant-ckpt shard rides the same link as STATE.
+# the wire, per worker (all volumes in bytes). The runtime submits
+# `train_bytes` as TRAIN traffic to the StateStream transport — the volume
+# that preempts checkpoint chunks — while the instant-ckpt shard rides the
+# fabric as STATE. On a hierarchical PodFabric the allreduce is two-level
+# (intra-pod ring + inter-pod gateway ring), so the profile carries a
+# per-tier wire volume.
 # --------------------------------------------------------------------------- #
 @dataclass(frozen=True)
 class TrafficProfile:
-    train_bytes: float   # gradient ring-allreduce wire volume (preempting)
+    train_bytes: float   # per-ICI-edge gradient allreduce volume (preempting)
     state_bytes: float   # razor-unique instant-ckpt shard, one DP-ring hop
+    dcn_bytes: float = 0.0  # per-DCN-edge inter-pod allreduce volume
 
 
 def step_traffic(grad_bytes: float, dp: int,
                  razor: Optional[RazorPlan] = None,
                  state_bytes: Optional[float] = None) -> TrafficProfile:
-    """Per-iteration wire volumes for one worker. Ring allreduce moves
-    2(dp-1)/dp of the gradient bytes; the instant checkpoint moves the
-    razor-unique optimizer shard one hop along the DP ring."""
+    """Per-iteration wire volumes for one worker (flat DP ring). Ring
+    allreduce moves 2(dp-1)/dp of the gradient bytes; the instant checkpoint
+    moves the razor-unique optimizer shard one hop along the DP ring."""
     wire = 2.0 * (dp - 1) / dp * grad_bytes if dp > 1 else 0.0
     if state_bytes is None:
         state_bytes = float(razor.unique_bytes_per_device_ring) if razor \
             else 0.0
     return TrafficProfile(wire, state_bytes)
+
+
+def hierarchical_step_traffic(grad_bytes: float, n_pods: int, pod_size: int,
+                              razor: Optional[RazorPlan] = None,
+                              state_bytes: Optional[float] = None
+                              ) -> TrafficProfile:
+    """Per-iteration wire volumes for the two-level allreduce on a
+    `PodFabric` (bytes).
+
+    Intra-pod: ring reduce-scatter + allgather over the `pod_size`-node ICI
+    ring moves ``2(s-1)/s * grad_bytes`` across every ICI edge
+    (`train_bytes`). Inter-pod: after the reduce-scatter each node holds a
+    ``grad_bytes / s`` shard; the gateways allreduce those shards around the
+    `n_pods`-pod DCN ring, putting ``2(P-1)/P * grad_bytes / s`` on every
+    DCN edge (`dcn_bytes`). Degenerates to `step_traffic` shapes when
+    P == 1 (no DCN leg) or s == 1 (pure DCN ring of gateways)."""
+    s, p = pod_size, n_pods
+    ici = 2.0 * (s - 1) / s * grad_bytes if s > 1 else 0.0
+    shard = grad_bytes / max(s, 1)
+    dcn = 2.0 * (p - 1) / p * shard if p > 1 else 0.0
+    if state_bytes is None:
+        state_bytes = float(razor.unique_bytes_per_device_ring) if razor \
+            else 0.0
+    return TrafficProfile(ici, state_bytes, dcn)
 
 
 def artifacts_traffic(artifacts: StepArtifacts, grad_bytes: float, dp: int
@@ -195,5 +223,11 @@ def submit_step_traffic(transport, profile: TrafficProfile, t: float):
     (`profile.train_bytes`) — on a `TopologyTransport` this loads each live
     ring edge with exactly that, and checkpoint STATE chunks then contend
     per-edge; on a single-link transport it degrades to the global
-    submission. Returns the submitted transfer(s)."""
+    submission. A profile with a `dcn_bytes` leg (hierarchical allreduce)
+    loads each tier with its own volume instead. Returns the submitted
+    transfer(s)."""
+    if profile.dcn_bytes and hasattr(transport, "submit_train_tiers"):
+        from repro.core.lccl import TIER_DCN, TIER_ICI
+        return transport.submit_train_tiers(
+            {TIER_ICI: profile.train_bytes, TIER_DCN: profile.dcn_bytes}, t)
     return transport.submit_train(profile.train_bytes, t)

@@ -1,0 +1,15 @@
+"""Docs stay true: README/docs code snippets' repro imports resolve, CLI
+`python -m` references exist, and every src/repro package is in the README
+module map (tools/check_docs.py, also the CI docs job)."""
+import subprocess
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+
+
+def test_docs_snippets_and_module_map():
+    proc = subprocess.run(
+        [sys.executable, str(ROOT / "tools" / "check_docs.py")],
+        capture_output=True, text=True)
+    assert proc.returncode == 0, f"\n{proc.stdout}\n{proc.stderr}"

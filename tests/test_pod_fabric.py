@@ -1,0 +1,375 @@
+"""Hierarchical pod fabric (ISSUE 3 tentpole): ICI-ring × DCN-hop shape,
+per-edge latency in completion times, tier-aware stream placement (DCN wins
+only once the ICI ring is saturated), bidirectional ring routing halving an
+idle-ring recovery, seeded failure storms darkening whole pods, and the
+per-tier FCR closed form."""
+import numpy as np
+import pytest
+
+from repro.ckpt.stream import ChunkedStream, StreamAssembler, TopologyTransport
+from repro.core.fcr import (fcr, fcr_hidden_per_tier, fcr_per_tier, is_free)
+from repro.core.lccl import (TIER_DCN, TIER_ICI, LinkScheduler, LinkTopology,
+                             PodFabric, edge_key, inject_storm,
+                             submit_chunked_path)
+from repro.train.step import hierarchical_step_traffic, submit_step_traffic
+
+
+# --------------------------------------------------------------------------- #
+# fabric shape + tiers
+# --------------------------------------------------------------------------- #
+def test_pod_fabric_shape_and_tiers():
+    fab = PodFabric(3, 4, ici_bw=50e9, dcn_bw=5e9)
+    assert fab.n == 12
+    assert fab.pod_of(0) == 0 and fab.pod_of(5) == 1 and fab.pod_of(11) == 2
+    assert fab.pod_nodes(1) == [4, 5, 6, 7]
+    assert [fab.gateway(p) for p in range(3)] == [0, 4, 8]
+    ici = fab.tier_edges(TIER_ICI)
+    dcn = fab.tier_edges(TIER_DCN)
+    assert len(ici) == 12              # 3 pods x 4-node ring
+    assert sorted(dcn) == [(0, 4), (0, 8), (4, 8)]
+    assert fab.tier(0, 4) == TIER_DCN and fab.tier(0, 1) == TIER_ICI
+    assert all(fab.edge(*e).bw == 50e9 for e in ici)
+    assert all(fab.edge(*e).bw == 5e9 for e in dcn)
+    assert fab.tiers() == [TIER_DCN, TIER_ICI]
+
+
+def test_pod_fabric_degenerate_sizes():
+    # two pods of two nodes: one ICI edge each, a single DCN edge
+    fab = PodFabric(2, 2, 1e9, 1e8)
+    assert sorted(fab.edges()) == [(0, 1), (0, 2), (2, 3)]
+    assert fab.tier(0, 2) == TIER_DCN
+    # single pod: plain ICI ring, no DCN
+    solo = PodFabric(1, 4, 1e9, 1e8)
+    assert sorted(solo.tier_edges(TIER_ICI)) == [(0, 1), (0, 3), (1, 2),
+                                                 (2, 3)]
+    assert solo.tier_edges(TIER_DCN) == []
+    # pods of one node: a pure DCN gateway ring
+    gw = PodFabric(4, 1, 1e9, 1e8)
+    assert sorted(gw.edges()) == [(0, 1), (0, 3), (1, 2), (2, 3)]
+    assert all(fabt == TIER_DCN for fabt in gw.edge_tier.values())
+
+
+def test_cross_pod_path_rides_gateways():
+    fab = PodFabric(3, 4, 50e9, 5e9)
+    # node 5 (pod 1) -> node 2 (pod 0): ICI to gateway 4, DCN 4->0, ICI 0->2
+    path = fab.path(5, 2)
+    assert (0, 4) in path
+    tiers = [fab.tier(*e) for e in path]
+    assert TIER_DCN in tiers and TIER_ICI in tiers
+
+
+# --------------------------------------------------------------------------- #
+# latency
+# --------------------------------------------------------------------------- #
+def test_latency_adds_to_single_chunk_completion():
+    sched = LinkScheduler(1e6, quantum=1 << 20, latency=0.5)
+    tr = sched.submit("STATE", 1e6, 0.0)
+    sched.drain()
+    assert tr.t_finish == pytest.approx(1.0 + 0.5, rel=1e-9)
+    # TRAIN pays it too
+    tr2 = sched.submit("TRAIN", 2e6, sched.now)
+    sched.drain()
+    assert tr2.t_finish - tr2.t_start == pytest.approx(2.0 + 0.5, rel=1e-9)
+
+
+def test_latency_does_not_hold_the_link():
+    """Latency delays DELIVERY, not the next transfer: two back-to-back
+    chunks finish one transmission apart, each shifted by the latency."""
+    sched = LinkScheduler(1e6, quantum=1 << 20, latency=0.5)
+    a = sched.submit("STATE", 1e6, 0.0)
+    b = sched.submit("STATE", 1e6, 0.0)
+    sched.drain()
+    assert a.t_finish == pytest.approx(1.5, rel=1e-9)
+    assert b.t_finish == pytest.approx(2.5, rel=1e-9)
+
+
+def test_latency_accrues_per_hop_on_fabric():
+    fab = PodFabric(3, 2, 1e6, 1e6, dcn_latency=0.25, quantum=1e4)
+    path = fab.path(1, 3)              # 1-0 (ici), 0-2 (dcn), 2-3 (ici)
+    assert [fab.tier(*e) for e in path] == [TIER_ICI, TIER_DCN, TIER_ICI]
+    pts = submit_chunked_path(fab, "STATE", 1e4, 0.0, path, quantum=1e4)
+    fab.drain()
+    # 3 hops of 0.01 s transmission + one 0.25 s DCN delivery latency
+    assert pts[0].t_finish == pytest.approx(0.03 + 0.25, rel=1e-6)
+
+
+# --------------------------------------------------------------------------- #
+# tier-aware placement: DCN wins only when the ICI ring is saturated
+# --------------------------------------------------------------------------- #
+def test_dcn_beats_ici_only_when_ici_saturated():
+    fab = PodFabric(2, 4, ici_bw=50e9, dcn_bw=5e9)
+    # idle fabric: the fast tier wins placement
+    assert fab.tier(*fab.least_loaded_edge()) == TIER_ICI
+    # TRAIN backlog on every ICI edge: the slack DCN tier wins
+    for e in fab.tier_edges(TIER_ICI):
+        fab.edge(*e).submit("TRAIN", 10e9, 0.0)
+    assert fab.tier(*fab.least_loaded_edge()) == TIER_DCN
+    # ... but only while the backlog outweighs the bandwidth gap: a light
+    # ICI load (drains faster than an idle DCN tie-break) keeps ICI
+    fab2 = PodFabric(2, 4, ici_bw=50e9, dcn_bw=5e9)
+    loaded = fab2.tier_edges(TIER_ICI)[0]
+    fab2.edge(*loaded).submit("TRAIN", 10e9, 0.0)
+    pick = fab2.least_loaded_edge()
+    assert fab2.tier(*pick) == TIER_ICI and edge_key(*pick) != loaded
+
+
+def test_full_artifact_spills_to_dcn_under_train_pressure():
+    fab = PodFabric(2, 2, ici_bw=1e6, dcn_bw=1e6)
+    tp = TopologyTransport(fab)
+    for e in fab.tier_edges(TIER_ICI):
+        tp.submit_train_edge(*e, 5e6, 0.0)
+    arr = np.arange(256, dtype=np.float32)
+    cs = ChunkedStream.from_array("full", arr, quantum=256)
+    asm = StreamAssembler.for_stream(cs)
+    tp.send(cs, 0.0, assembler=asm)    # no src/dst: least-loaded placement
+    assert fab.edge(0, 2).pending_bytes("STATE") > 0   # the DCN edge
+    tp.drain()
+    assert asm.complete
+    np.testing.assert_array_equal(asm.to_array(), arr)
+
+
+# --------------------------------------------------------------------------- #
+# bidirectional ring routing
+# --------------------------------------------------------------------------- #
+def test_split_bytes_even_on_idle_symmetric_ring():
+    topo = LinkTopology(8, 1e6)
+    paths = topo.disjoint_paths(0, 1)
+    assert len(paths) == 2 and len(paths[0]) == 1 and len(paths[1]) == 7
+    shares = topo.split_bytes(paths, 1e6)
+    assert shares == pytest.approx([5e5, 5e5])
+
+
+def test_split_bytes_weighs_rate_and_backlog():
+    topo = LinkTopology(4, 1e6)
+    topo.set_bandwidth(1, 2, 2e6)      # cw path 0-1-2 bottlenecked at 1e6
+    paths = [topo.path(0, 2), [edge_key(0, 3), edge_key(2, 3)]]
+    shares = topo.split_bytes(paths, 3e6)
+    assert shares == pytest.approx([1.5e6, 1.5e6])   # equal bottlenecks
+    # backlog on one direction shifts bytes to the other
+    topo.edge(0, 3).submit("TRAIN", 1e6, 0.0)        # 1 s of backlog
+    shares = topo.split_bytes(paths, 3e6)
+    assert shares[0] - shares[1] == pytest.approx(1e6)
+    assert sum(shares) == pytest.approx(3e6)
+
+
+def test_bidirectional_split_halves_idle_ring_recovery():
+    """Acceptance: on an idle symmetric ring the bidirectional policy moves
+    a recovery in ~half the single-direction time, and strictly beats it."""
+    nbytes, bw, q = 4 << 20, 1e6, 1 << 12
+
+    def recover(policy):
+        topo = LinkTopology(8, bw, quantum=q)
+        tp = TopologyTransport(topo)
+        arr = np.zeros(nbytes // 8, dtype=np.float64)
+        cs = ChunkedStream.from_array("r", arr, quantum=q)
+        asm = StreamAssembler.for_stream(cs)
+        ticket = tp.send(cs, 0.0, assembler=asm, src=0, dst=1, policy=policy)
+        tp.drain()
+        assert asm.complete
+        return ticket.finish_time
+
+    t_uni = recover("shortest")
+    t_bi = recover("split")
+    assert t_uni == pytest.approx(nbytes / bw, rel=1e-3)
+    assert t_bi < t_uni                                  # strictly better
+    assert t_bi == pytest.approx(t_uni / 2, rel=0.05)    # ~halved
+
+
+def test_bidirectional_schedule_state_phase_matches_transport():
+    from repro.runtime.failover import schedule_state_phase
+    bw, nbytes = 1e6, 4 << 20
+    topo = LinkTopology(8, bw, quantum=1 << 12)
+    t_bi = schedule_state_phase(nbytes, bw, quantum=1 << 12, topology=topo,
+                                paths=topo.disjoint_paths(0, 1))
+    assert t_bi == pytest.approx(nbytes / bw / 2, rel=0.05)
+
+
+def test_split_falls_back_to_single_path_when_one_direction_dark():
+    topo = LinkTopology(6, 1e6, quantum=1 << 12)
+    topo.fail_edge(1, 2)               # cw direction severed
+    tp = TopologyTransport(topo)
+    arr = np.arange(1024, dtype=np.float32)
+    cs = ChunkedStream.from_array("s", arr, quantum=1 << 12)
+    asm = StreamAssembler.for_stream(cs)
+    tp.send(cs, 0.0, assembler=asm, src=0, dst=2)
+    tp.drain()
+    assert asm.complete
+    np.testing.assert_array_equal(asm.to_array(), arr)
+
+
+# --------------------------------------------------------------------------- #
+# failure storms
+# --------------------------------------------------------------------------- #
+def test_storm_darkens_whole_pod_and_recovery_routes_over_dcn():
+    fab = PodFabric(4, 4, ici_bw=50e9, dcn_bw=5e9, dcn_latency=1e-3)
+    rep = inject_storm(fab, seed=123, pods=1)
+    assert len(rep.pods) == 1
+    dark = rep.pods[0]
+    assert fab.dark_pods() == [dark]
+    assert set(rep.nodes) == set(fab.pod_nodes(dark))
+    # a fetch between the two pods flanking the dark one must race the
+    # other way around the gateway ring, over DCN
+    src = fab.gateway((dark + 1) % 4)
+    dst = fab.gateway((dark - 1) % 4)
+    path = fab.path(src, dst)
+    dark_nodes = set(fab.pod_nodes(dark))
+    assert all(u not in dark_nodes and v not in dark_nodes
+               for u, v in path)
+    assert sum(1 for e in path if fab.tier(*e) == TIER_DCN) >= 2
+    # and the transfer is bounded by DCN bandwidth + per-hop latency
+    pts = submit_chunked_path(fab, "STATE", 50e6, 0.0, path)
+    fab.drain()
+    n_dcn = sum(1 for e in path if fab.tier(*e) == TIER_DCN)
+    bound = 50e6 / 5e9 + n_dcn * 1e-3 + len(path) * (1 << 20) / 5e9
+    assert max(pt.t_finish for pt in pts) <= bound * 1.01
+
+
+def test_storm_is_reproducible_and_correlated():
+    a = inject_storm(PodFabric(4, 4, 1e9, 1e8), seed=7, pods=1,
+                     edge_failures=2)
+    b = inject_storm(PodFabric(4, 4, 1e9, 1e8), seed=7, pods=1,
+                     edge_failures=2)
+    assert a == b                      # same seed, same blast
+    c = inject_storm(PodFabric(4, 4, 1e9, 1e8), seed=8, pods=1,
+                     edge_failures=2)
+    assert (a.pods, a.edges) != (c.pods, c.edges) or a != c
+    assert len(a.edges) == 2
+
+
+def test_storm_on_flat_ring_fails_clustered_edges():
+    topo = LinkTopology(8, 1e9)
+    rep = inject_storm(topo, seed=3, pods=1, edge_failures=2)
+    assert rep.pods == ()              # no pods on a flat ring
+    assert len(rep.edges) == 2
+    assert all(e in topo.dark_edges for e in rep.edges)
+
+
+# --------------------------------------------------------------------------- #
+# per-tier FCR
+# --------------------------------------------------------------------------- #
+def test_fcr_per_tier_matches_closed_form_on_idle_fabric():
+    rng = np.random.default_rng(11)
+    for _ in range(8):
+        s = float(rng.integers(128, 1 << 14))
+        b = float(rng.integers(1, 64))
+        c = float(rng.uniform(1e12, 1e16))
+        v_ici = float(rng.uniform(1e9, 1e12))
+        v_dcn = float(rng.uniform(1e8, 1e10))
+        if abs(fcr(s, b, v_ici, c) - 1.0) < 1e-3 or \
+                abs(fcr(s, b, v_dcn, c) - 1.0) < 1e-3:
+            continue                   # numerical knife-edge
+        fab = PodFabric(3, 3, v_ici, v_dcn)
+        closed = fcr_per_tier(fab, s, b, c)
+        assert closed[TIER_ICI] == pytest.approx(fcr(s, b, v_ici, c))
+        assert closed[TIER_DCN] == pytest.approx(fcr(s, b, v_dcn, c))
+        hidden = fcr_hidden_per_tier(fab, s, b, c, phi=1e8)
+        assert hidden[TIER_ICI] == is_free(s, b, v_ici, c)
+        assert hidden[TIER_DCN] == is_free(s, b, v_dcn, c)
+
+
+# --------------------------------------------------------------------------- #
+# hierarchical train traffic
+# --------------------------------------------------------------------------- #
+def test_hierarchical_step_traffic_shapes():
+    g = 1e9
+    p = hierarchical_step_traffic(g, n_pods=4, pod_size=8)
+    assert p.train_bytes == pytest.approx(2 * 7 / 8 * g)
+    assert p.dcn_bytes == pytest.approx(2 * 3 / 4 * g / 8)
+    # degenerate: one pod -> flat intra-pod ring, no DCN leg
+    flat = hierarchical_step_traffic(g, n_pods=1, pod_size=8)
+    assert flat.dcn_bytes == 0.0
+    # degenerate: singleton pods -> pure gateway ring
+    gw = hierarchical_step_traffic(g, n_pods=8, pod_size=1)
+    assert gw.train_bytes == 0.0
+    assert gw.dcn_bytes == pytest.approx(2 * 7 / 8 * g)
+
+
+# --------------------------------------------------------------------------- #
+# cluster-level: pod fabric training + storm recovery
+# --------------------------------------------------------------------------- #
+def _mk_pod_cluster(tmp_path, **kw):
+    import dataclasses
+
+    import jax  # noqa: F401  (ensures cpu backend initialized)
+    from repro.configs import get_arch, reduce_for_smoke
+    from repro.optim import AdamWConfig
+    from repro.runtime.cluster import SimCluster
+    cfg = dataclasses.replace(reduce_for_smoke(get_arch("qwen3-0.6b")),
+                              dtype="float32")
+    kw.setdefault("quantum", 2048)
+    kw.setdefault("pods", 2)
+    kw.setdefault("dcn_bw", 5e9)
+    kw.setdefault("dcn_latency", 1e-4)
+    return SimCluster(cfg, dp=4, global_batch=8, seq_len=16,
+                      ckpt_dir=tmp_path / "ck", full_every=50,
+                      hp=AdamWConfig(lr=1e-3, warmup_steps=2, total_steps=50),
+                      seed=0, **kw)
+
+
+def test_cluster_builds_pod_fabric_and_trains(tmp_path):
+    import jax
+    clu = _mk_pod_cluster(tmp_path)
+    assert isinstance(clu.topology, PodFabric)
+    assert clu.topology.n_pods == 2 and clu.topology.pod_size == 2
+    losses = clu.run(3)
+    assert all(np.isfinite(l) for l in losses)
+    # the two-level allreduce loaded BOTH tiers with TRAIN traffic
+    prof = clu.step_traffic_profile()
+    assert prof.dcn_bytes > 0
+    moved = sum(clu.topology.edge(*e).n_finished
+                for e in clu.topology.tier_edges(TIER_DCN))
+    assert moved > 0
+    # state still bitwise-identical to a flat-ring run is not required —
+    # but recovery must be: exercised in the storm test below
+    del jax
+
+
+def test_cluster_storm_recovery_bitwise_over_dcn(tmp_path):
+    import jax
+    clu = _mk_pod_cluster(tmp_path)
+    clu.run(2)
+    at_failure = [np.asarray(x).copy() for x in jax.tree.leaves(clu.state)]
+    rep_storm = clu.inject_storm(7, pods=1)
+    assert len(rep_storm.pods) == 1
+    assert len(rep_storm.nodes) == 2   # the whole 2-worker pod died
+    dead = set(rep_storm.nodes)
+    assert all(not clu.workers[w].alive for w in dead)
+    # one dead worker's backup holder is in the OTHER pod (ring successor),
+    # so its recovery stream must cross the DCN gateway edge
+    report = clu.recover()
+    assert report.kind == "software"
+    assert report.rolled_back_iterations == 0
+    for x, y in zip(at_failure, jax.tree.leaves(clu.state)):
+        np.testing.assert_array_equal(x, np.asarray(y))
+    losses = clu.run(2)
+    assert all(np.isfinite(l) for l in losses)
+
+
+def test_cluster_storm_edge_damage_persists_then_heals(tmp_path):
+    import jax  # noqa: F401
+    clu = _mk_pod_cluster(tmp_path)
+    clu.run(2)
+    rep_storm = clu.inject_storm(5, pods=1, edge_failures=1)
+    assert len(rep_storm.edges) == 1
+    assert rep_storm.edges[0] in clu.topology.dark_edges
+    report = clu.recover()             # streams routed around the dark edge
+    assert report.recovered_from == "neighbor"
+    # a completed recovery repairs the storm's fabric damage with the pods
+    assert rep_storm.edges[0] not in clu.topology.dark_edges
+    assert clu.last_storm is None
+    losses = clu.run(2)
+    assert all(np.isfinite(l) for l in losses)
+
+
+def test_submit_step_traffic_loads_each_tier():
+    fab = PodFabric(2, 4, 1e9, 1e8)
+    tp = TopologyTransport(fab)
+    prof = hierarchical_step_traffic(8e6, 2, 4)
+    trs = submit_step_traffic(tp, prof, 0.0)
+    assert len(trs) == len(fab.live_edges())
+    for e in fab.tier_edges(TIER_ICI):
+        assert fab.edge(*e).pending_bytes("TRAIN") == \
+            pytest.approx(prof.train_bytes)
+    for e in fab.tier_edges(TIER_DCN):
+        assert fab.edge(*e).pending_bytes("TRAIN") == \
+            pytest.approx(prof.dcn_bytes)

@@ -1,0 +1,103 @@
+#!/usr/bin/env python
+"""Docs smoke checker (CI `docs` job, also run by tests/test_docs.py).
+
+Two guarantees, so the docs can't silently rot:
+
+1. Every ```python fenced block in README.md and docs/*.md has its
+   `import repro...` / `from repro... import ...` lines executed — a doc
+   referencing a moved or renamed symbol fails the build. Bash fences are
+   scanned for `python -m <module>` invocations and each module must be
+   importable (spec-resolvable) without running it.
+2. Every package under src/repro/ is mentioned in the README module map
+   (as `repro/<name>`), so the map stays complete as the codebase grows.
+
+Exit code 0 = clean; nonzero prints every failure.
+"""
+from __future__ import annotations
+
+import importlib.util
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+FENCE = re.compile(r"```(\w+)?\n(.*?)```", re.DOTALL)
+IMPORT = re.compile(r"^\s*(?:import\s+repro|from\s+repro[\w.]*\s+import)\s",
+                    re.MULTILINE)
+PY_M = re.compile(r"python\s+-m\s+([\w.]+)")
+
+
+def doc_files() -> list[Path]:
+    return [ROOT / "README.md"] + sorted((ROOT / "docs").glob("*.md"))
+
+
+def iter_fences(path: Path):
+    for lang, body in FENCE.findall(path.read_text()):
+        yield (lang or "").lower(), body
+
+
+def check_python_imports(path: Path, body: str) -> list[str]:
+    """Exec the repro import lines of one fenced python block."""
+    lines = [ln for ln in body.splitlines() if IMPORT.match(ln)]
+    errors = []
+    for ln in lines:
+        try:
+            exec(ln.strip(), {})
+        except Exception as e:  # noqa: BLE001 - report, don't crash
+            errors.append(f"{path.name}: import failed: {ln.strip()!r} "
+                          f"({type(e).__name__}: {e})")
+    return errors
+
+
+def check_bash_modules(path: Path, body: str) -> list[str]:
+    errors = []
+    for mod in PY_M.findall(body):
+        try:
+            found = importlib.util.find_spec(mod) is not None
+        except (ImportError, ModuleNotFoundError):
+            found = False
+        if not found:
+            errors.append(f"{path.name}: `python -m {mod}` does not resolve")
+    return errors
+
+
+def check_module_map() -> list[str]:
+    readme = (ROOT / "README.md").read_text()
+    errors = []
+    pkg_root = ROOT / "src" / "repro"
+    for child in sorted(pkg_root.iterdir()):
+        if child.name.startswith("__"):
+            continue
+        name = child.name if child.is_dir() else \
+            (child.name[:-3] if child.suffix == ".py" else None)
+        if name is None:
+            continue
+        if f"repro/{name}" not in readme:
+            errors.append(f"README.md module map is missing repro/{name}")
+    return errors
+
+
+def main() -> int:
+    sys.path.insert(0, str(ROOT / "src"))
+    sys.path.insert(0, str(ROOT))      # for `python -m benchmarks.*`
+    errors: list[str] = []
+    for path in doc_files():
+        if not path.exists():
+            errors.append(f"missing doc file: {path}")
+            continue
+        for lang, body in iter_fences(path):
+            if lang == "python":
+                errors.extend(check_python_imports(path, body))
+            elif lang == "bash":
+                errors.extend(check_bash_modules(path, body))
+    errors.extend(check_module_map())
+    for e in errors:
+        print(f"FAIL: {e}")
+    if not errors:
+        print(f"docs OK: {len(doc_files())} files checked, "
+              f"module map complete")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
