@@ -246,12 +246,28 @@ class StreamTicket:
 
     @property
     def finish_time(self) -> Optional[float]:
-        """Link-time instant the last chunk landed (None while in flight)."""
+        """Link-time instant the last chunk landed (None while in flight).
+        Exact per hop: the fabric's event-ordered clock forwards and
+        finishes each chunk at its true store-and-forward instant, whether
+        the window it rode in was ``run(until=...)`` or ``drain()``."""
         if not self.transfers:
             return self.submitted_at
         if not self.complete:
             return None
         return max(tr.t_finish for tr in self.transfers)
+
+    @property
+    def delivery_edge(self):
+        """The fabric edge that hands this stream to its consumer — the
+        last hop of its routed path (`PathTransfer.delivery_edge`). None on
+        a single-link transport or for local delivery. Single-path policies
+        ("shortest", e.g. instant neighbor shards) put every chunk on the
+        same path, so the first routed transfer is authoritative."""
+        for tr in self.transfers:
+            edge = getattr(tr, "delivery_edge", None)
+            if edge is not None:
+                return edge
+        return None
 
     @property
     def bytes_moved(self) -> int:
@@ -327,7 +343,11 @@ class _NackingTransport:
 
     def drain(self, max_rounds: int = 16) -> float:
         """Run the link(s) until every stream — NACK retransmits and
-        multi-hop forwards included — has landed; returns the clock."""
+        multi-hop forwards included — has landed; returns the clock. The
+        fabric itself drains in a single event-ordered pass (multi-hop
+        chains complete inside one `_drain_links` call); the loop here only
+        re-runs for chunks the delivery step re-submitted (CRC-rejected
+        NACK resends), so it is bounded by `max_retransmits`."""
         for _ in range(max_rounds):
             t = self._drain_links()
             if self.pump() == 0 and self._links_idle():

@@ -158,6 +158,9 @@ def fcr_hidden_emergent(s: float, b: float, v: float, c: float,
         per_iter.append(submit_chunked(sched, "STATE", ckpt_bytes, i * t_c))
     for t, nbytes in train_traffic:
         sched.submit("TRAIN", nbytes, t)
+    # one exact pass: drain's event-ordered clock records every chunk's true
+    # finish instant (windowed advancement would produce identical times),
+    # so the per-iteration verdict below reads the exact schedule
     sched.drain()
     eps = 1e-9 * max(t_c, 1.0)
     return all(tr.t_finish <= (i + 1) * t_c + eps

@@ -38,6 +38,7 @@ by the failover runtime.
 """
 from __future__ import annotations
 
+import bisect
 import threading
 import time
 from dataclasses import dataclass, field
@@ -157,7 +158,14 @@ class LinkScheduler:
     The simulation clock (`now`) persists across `run(until=...)` calls, and a
     partially-transferred STATE item (`_rem`/`_rem_bytes`) is carried over, so
     a scheduler can be advanced incrementally — e.g. one training iteration at
-    a time — and residual state resumes exactly where it left off."""
+    a time — and residual state resumes exactly where it left off.
+
+    Two event-clock primitives let `LinkTopology` advance a whole fabric of
+    these schedulers in cross-edge event order: `peek_next_finish(until)`
+    reports (without mutating anything) WHEN this link's next transfer would
+    complete, and ``run(until, stop_after_finish=True)`` advances exactly to
+    that completion, leaving the clock at the event instant instead of the
+    window horizon."""
 
     def __init__(self, bandwidth: float, quantum: float = 1 << 20,
                  latency: float = 0.0):
@@ -171,11 +179,17 @@ class LinkScheduler:
         self._state: List[Transfer] = []
         self._rem: Optional[Transfer] = None   # STATE mid-flight across runs
         self._rem_bytes = 0.0
-        self._last_finish = 0.0        # last TRANSMISSION end (no latency)
 
     def submit(self, kind: str, size: float, t: float) -> Transfer:
         tr = Transfer(kind, size, t)
-        (self._train if kind == "TRAIN" else self._state).append(tr)
+        # queues stay sorted by t_submit at all times (insort_right keeps
+        # same-instant submissions in submission order), so run/peek walk
+        # from the head with cursors instead of re-sorting per call; run
+        # prunes its consumed prefix in one slice. Submissions in
+        # non-decreasing time order (the overwhelmingly common case) insert
+        # at the tail, so insort costs no element shifts there
+        q = self._train if kind == "TRAIN" else self._state
+        bisect.insort_right(q, tr, key=lambda x: x.t_submit)
         return tr
 
     def _finish(self, tr: Transfer, tx_end: float) -> None:
@@ -186,7 +200,6 @@ class LinkScheduler:
         tr.finished = True
         self.done.append(tr)
         self.n_finished += 1
-        self._last_finish = max(self._last_finish, tx_end)
 
     @property
     def idle(self) -> bool:
@@ -200,37 +213,50 @@ class LinkScheduler:
             out += sum(x.size for x in self._state) + self._rem_bytes
         return out
 
-    def run(self, until: float) -> float:
+    def run(self, until: float, *, stop_after_finish: bool = False) -> float:
         """Simulate from `now` to `until`; returns link-busy seconds. A
         transfer started before `until` runs to completion (TRAIN is never
         preempted; a STATE quantum is all-or-nothing), so `now` may end up
-        slightly past `until`."""
+        slightly past `until`.
+
+        With ``stop_after_finish=True`` (the event-clock stepping mode used
+        by `LinkTopology.run`) the simulation stops right after the FIRST
+        transfer completion and `now` is left at that completion's
+        transmission-end instant — not clamped to `until` — so forwarded
+        submissions landing at that instant are still in this link's
+        future."""
         t = self.now
         busy = 0.0
-        pend_t = sorted(self._train, key=lambda x: x.t_submit)
-        pend_s = sorted(self._state, key=lambda x: x.t_submit)
+        finished = False
+        pend_t = self._train           # sorted by t_submit (see submit)
+        pend_s = self._state
+        it = is_ = 0                   # consumed-prefix cursors
         rem_s, rem_bytes = self._rem, self._rem_bytes
-        while t < until and (pend_t or pend_s or rem_s is not None):
-            ready_t = [x for x in pend_t if x.t_submit <= t]
-            if ready_t:
-                tr = ready_t[0]
-                pend_t.remove(tr)
+        while not finished and t < until and \
+                (it < len(pend_t) or is_ < len(pend_s) or rem_s is not None):
+            if it < len(pend_t) and pend_t[it].t_submit <= t:
+                tr = pend_t[it]        # earliest-submitted ready TRAIN
+                it += 1
                 tr.t_start = max(t, tr.t_submit)
                 dt = tr.size / self.bw
                 t = tr.t_start + dt
                 busy += dt
                 self._finish(tr, tx_end=t)
+                finished = stop_after_finish
                 continue
             # link idle for TRAIN: advance STATE by one quantum
-            nxt_t = min((x.t_submit for x in pend_t), default=float("inf"))
-            if rem_s is None and pend_s and pend_s[0].t_submit <= t:
-                rem_s = pend_s.pop(0)
+            nxt_t = pend_t[it].t_submit if it < len(pend_t) else float("inf")
+            if rem_s is None and is_ < len(pend_s) and \
+                    pend_s[is_].t_submit <= t:
+                rem_s = pend_s[is_]
+                is_ += 1
                 rem_s.t_start = max(t, rem_s.t_submit)
                 rem_bytes = rem_s.size
             if rem_s is not None:
                 if rem_bytes <= 0:          # zero-byte transfer: instant
                     self._finish(rem_s, tx_end=t)
                     rem_s = None
+                    finished = stop_after_finish
                     continue
                 chunk = min(self.quantum, rem_bytes)
                 dt = chunk / self.bw
@@ -243,40 +269,82 @@ class LinkScheduler:
                 if rem_bytes <= 0:
                     self._finish(rem_s, tx_end=t)
                     rem_s = None
+                    finished = stop_after_finish
                 continue
-            # nothing runnable: jump to next submission
-            nxt_s = min((x.t_submit for x in pend_s), default=float("inf"))
+            # nothing runnable: jump to the next submission — but never past
+            # the window horizon: a submission at t >= until belongs to a
+            # later window, and overshooting the clock to it would delay
+            # transfers forwarded onto this link in between (breaking
+            # windowed == drained)
+            nxt_s = pend_s[is_].t_submit if is_ < len(pend_s) \
+                else float("inf")
+            nxt = min(nxt_t, nxt_s)
+            if nxt >= until:
+                break
+            t = max(t, nxt)
+        del pend_t[:it]                # prune consumed prefixes in one move
+        del pend_s[:is_]
+        self._rem, self._rem_bytes = rem_s, rem_bytes
+        if stop_after_finish or until == float("inf"):
+            self.now = t
+        else:
+            self.now = max(t, until)
+        return busy
+
+    def peek_next_finish(self, until: float = float("inf")
+                         ) -> Optional[float]:
+        """Transmission-end time of the FIRST transfer `run(until)` would
+        complete from the current state, or None when no queued transfer
+        finishes in the window. Pure dry-run — nothing mutates — mirroring
+        `run`'s scheduling decisions exactly, including the stable
+        submission-order tie-break the sorted queues encode
+        (`tests/test_event_clock.py` asserts the two agree on randomized
+        workloads with same-instant submissions). Cursors walk the sorted
+        queues in place, so a peek costs only the quanta up to the first
+        completion — no copies, no sorting."""
+        t = self.now
+        pend_t, pend_s = self._train, self._state
+        it = is_ = 0                   # heads of the unconsumed queues
+        rem = self._rem_bytes if self._rem is not None else None
+        while t < until and (it < len(pend_t) or is_ < len(pend_s)
+                             or rem is not None):
+            if it < len(pend_t) and pend_t[it].t_submit <= t:
+                tr = pend_t[it]
+                return max(t, tr.t_submit) + tr.size / self.bw
+            nxt_t = pend_t[it].t_submit if it < len(pend_t) else float("inf")
+            if rem is None and is_ < len(pend_s) and \
+                    pend_s[is_].t_submit <= t:
+                rem = pend_s[is_].size
+                is_ += 1
+            if rem is not None:
+                if rem <= 0:                # zero-byte transfer: instant
+                    return t
+                chunk = min(self.quantum, rem)
+                dt = chunk / self.bw
+                if t + dt > nxt_t:      # TRAIN arrives mid-quantum: yield
+                    t = nxt_t
+                    continue
+                t += dt
+                rem -= chunk
+                if rem <= 0:
+                    return t
+                continue
+            nxt_s = pend_s[is_].t_submit if is_ < len(pend_s) \
+                else float("inf")
             nxt = min(nxt_t, nxt_s)
             if nxt == float("inf"):
                 break
             t = max(t, nxt)
-        self._train = pend_t
-        self._state = pend_s
-        self._rem, self._rem_bytes = rem_s, rem_bytes
-        self.now = max(t, until) if until != float("inf") else t
-        return busy
+        return None
 
-    def drain(self, max_rounds: int = 64) -> float:
+    def drain(self) -> float:
         """Run until every submitted transfer has finished; returns the final
-        clock. Bounded retry loop: preemption-aborted quanta retransmit, so a
-        single analytic horizon can undershoot."""
-        t0 = self.now
-        total = self.pending_bytes()
-        for _ in range(max_rounds):
-            if self.idle:
-                # clamp the clock back to the true completion instant — the
-                # run() horizon above carries slack that should not delay
-                # transfers submitted afterwards
-                self.now = min(self.now, max(self._last_finish, t0))
-                return self.now
-            last_submit = max(
-                [x.t_submit for x in self._train + self._state] +
-                ([self._rem.t_submit] if self._rem is not None else [0.0]))
-            horizon = max(self.now, last_submit) + \
-                self.pending_bytes() / self.bw + 2.0 * total / self.bw + 1.0
-            self.run(until=horizon)
-        raise RuntimeError("LinkScheduler.drain did not converge "
-                           "(TRAIN arrivals denser than one STATE quantum?)")
+        clock. A single pass: ``run(until=inf)`` processes arrivals in event
+        order (aborted quanta retried in place), so the clock lands exactly
+        on the last transmission end — no horizon slack to clamp away, and
+        nothing to retry, however dense the TRAIN arrivals."""
+        self.run(until=float("inf"))
+        return self.now
 
 
 # --------------------------------------------------------------------------- #
@@ -315,6 +383,14 @@ class PathTransfer:
     def edge(self) -> Optional[Edge]:
         return self.path[self.hop] if self.hop < len(self.path) else None
 
+    @property
+    def delivery_edge(self) -> Optional[Edge]:
+        """The fabric edge whose far end hands the item to its consumer —
+        the LAST hop of the routed path (None for local delivery). This is
+        the edge per-edge accounting (e.g. the cluster's instant
+        hidden/exposed books) should attribute the delivery to."""
+        return self.path[-1] if self.path else None
+
 
 class LinkTopology:
     """A graph of per-edge `LinkScheduler`s — the cluster fabric.
@@ -335,10 +411,12 @@ class LinkTopology:
     multi-hop detours.
 
     Multi-hop items move store-and-forward: a chunk fully crosses one edge,
-    then is submitted on the next at its arrival time (``_pump``). Within a
-    single ``run(until=...)`` window a chunk advances at most one hop (each
-    edge clock is already clamped to ``until``); ``drain()`` loops rounds
-    with growing horizons, so drained timings are exact."""
+    then is submitted on the next at its arrival time (``_pump``). Edges
+    advance in cross-edge EVENT ORDER (``run`` processes the globally
+    earliest completion first and forwards its next hop at the true arrival
+    instant), so a chunk crosses as many hops inside one ``run(until=...)``
+    window as its exact schedule allows — windowed timings equal ``drain()``
+    timings to float precision."""
 
     def __init__(self, n: int, bandwidth: float, quantum: float = 1 << 20,
                  kind: str = "ring",
@@ -375,7 +453,13 @@ class LinkTopology:
             for e in sorted(edges)}
         self.dark_nodes: set = set()
         self.dark_edges: set = set()
-        self._forwarding: List[PathTransfer] = []
+        # in-flight multi-hop items, keyed by the identity of the Transfer
+        # currently carrying them: the event loop in `run` knows exactly
+        # which transfer just finished, so forwarding is an O(1) dict pop
+        # instead of a scan over every item in the fabric (keys stay valid:
+        # a mapped Transfer is referenced by its PathTransfer, so its id
+        # cannot be recycled while mapped)
+        self._inflight: Dict[int, PathTransfer] = {}
 
     # ------------------------- graph queries ------------------------- #
     def edges(self) -> List[Edge]:
@@ -565,7 +649,7 @@ class LinkTopology:
             pt.t_finish = t
             return pt
         pt.transfer = self.links[pt.path[0]].submit(kind, size, t)
-        self._forwarding.append(pt)
+        self._inflight[id(pt.transfer)] = pt
         return pt
 
     def submit_train_edge(self, u: int, v: int, nbytes: float, t: float
@@ -597,30 +681,40 @@ class LinkTopology:
         return out
 
     # ------------------------- simulation ------------------------- #
-    def _pump(self) -> int:
-        """Advance store-and-forward: items whose current leg landed are
-        submitted on their next edge at the arrival time (or delivered)."""
-        progressed = 0
-        still = []
-        for pt in self._forwarding:
-            if pt.transfer is not None and pt.transfer.finished:
-                progressed += 1
-                pt.hop += 1
-                if pt.hop < len(pt.path):
-                    pt.transfer = self.links[pt.path[pt.hop]].submit(
-                        pt.kind, pt.size, pt.transfer.t_finish)
-                    still.append(pt)
-                else:
-                    pt.finished = True
-                    pt.t_finish = pt.transfer.t_finish
-            else:
-                still.append(pt)
-        self._forwarding = still
-        return progressed
+    def _advance(self, pt: PathTransfer) -> Optional[Edge]:
+        """One store-and-forward step for an item whose current leg landed:
+        submit it on its next edge at the arrival instant (returning that
+        edge) or deliver it (returning None). The caller has already
+        removed the finished leg's mapping from `_inflight`."""
+        pt.hop += 1
+        if pt.hop < len(pt.path):
+            nxt = pt.path[pt.hop]
+            pt.transfer = self.links[nxt].submit(
+                pt.kind, pt.size, pt.transfer.t_finish)
+            self._inflight[id(pt.transfer)] = pt
+            return nxt
+        pt.finished = True
+        pt.t_finish = pt.transfer.t_finish
+        return None
+
+    def _pump(self) -> set:
+        """Full-scan fallback of `_advance`: forward every in-flight item
+        whose current leg landed (the event loop in `run` forwards each
+        completion as it happens; this catches transfers finished by any
+        out-of-band `LinkScheduler.run`). Returns the edges that received
+        forwarded submissions."""
+        touched: set = set()
+        for key, pt in list(self._inflight.items()):
+            if pt.transfer.finished:
+                del self._inflight[key]
+                nxt = self._advance(pt)
+                if nxt is not None:
+                    touched.add(nxt)
+        return touched
 
     @property
     def idle(self) -> bool:
-        return not self._forwarding and \
+        return not self._inflight and \
             all(sch.idle for sch in self.links.values())
 
     def pending_bytes(self, kind: Optional[str] = None) -> float:
@@ -631,20 +725,54 @@ class LinkTopology:
         return max((sch.now for sch in self.links.values()), default=0.0)
 
     def run(self, until: float) -> float:
-        busy = sum(sch.run(until) for sch in self.links.values())
+        """Advance the fabric to `until` in cross-edge EVENT ORDER.
+
+        Completions are processed globally earliest-first: the edge whose
+        next transfer finishes soonest advances exactly to that completion
+        (``stop_after_finish``), the completion's forwarded hop (if any) is
+        submitted on its next edge at the true arrival instant, and only
+        then is the next-earliest completion considered. Every other edge's
+        clock still trails the event frontier at that moment, so a
+        forwarded submission is never clamped to a window boundary — a
+        multi-hop stream crosses as many hops inside one window as its
+        exact store-and-forward schedule allows, and windowed timings equal
+        drained timings. Finally each edge coasts to `until` (residual
+        STATE quanta, clock advance). Returns total link-busy seconds."""
+        busy = 0.0
+        peek: Dict[Edge, Optional[float]] = {
+            e: sch.peek_next_finish(until) for e, sch in self.links.items()}
+        while True:
+            nxt = [(t, e) for e, t in peek.items() if t is not None]
+            if not nxt:
+                break
+            _, e = min(nxt)
+            sch = self.links[e]
+            before = sch.n_finished
+            busy += sch.run(until, stop_after_finish=True)
+            if sch.n_finished == before:   # peek promised a completion
+                raise RuntimeError(f"event clock stalled on edge {e}")
+            peek[e] = sch.peek_next_finish(until)
+            # forward the item the completed transfer was carrying (if any)
+            # at its exact arrival instant — O(1), no fabric scan
+            pt = self._inflight.pop(id(sch.done[-1]), None)
+            if pt is not None:
+                f = self._advance(pt)
+                if f is not None:          # new submission: refresh its peek
+                    peek[f] = self.links[f].peek_next_finish(until)
+        for sch in self.links.values():
+            busy += sch.run(until)
         self._pump()
         return busy
 
-    def drain(self, max_rounds: int = 64) -> float:
-        """Run every edge until all transfers (and forwarded hops) land."""
-        for _ in range(max_rounds):
-            for sch in self.links.values():
-                if not sch.idle:
-                    sch.drain()
-            self._pump()
-            if self.idle:
-                return self.clock
-        raise RuntimeError("LinkTopology.drain did not converge")
+    def drain(self) -> float:
+        """Run until all transfers (and every forwarded hop) land: a single
+        event-ordered pass over the queue — `run` with an infinite horizon
+        forwards each hop at its exact completion instant, so whole
+        multi-hop chains complete in one call and the returned clock is the
+        true last-delivery transmission end (no horizon slack, no retry
+        rounds)."""
+        self.run(until=float("inf"))
+        return self.clock
 
 
 # --------------------------------------------------------------------------- #

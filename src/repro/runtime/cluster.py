@@ -271,36 +271,30 @@ class SimCluster:
                 {"marker": np.zeros(1)}, t=self.sim_time)
             self.controller.beat(w.wid)
             w.step_times.append(time.monotonic() - t0)
-        # advance the link model one modeled iteration; instant-ckpt chunks
-        # that drain before the boundary were hidden (the FCR condition,
-        # emergent from the transport instead of Eq. 2) — tracked globally
-        # and per adjacent ring edge. The window advances in sub-steps:
-        # store-and-forward items move one hop per run() window, so a
-        # cross-pod (multi-hop) instant stream needs several pump rounds to
-        # land within the iteration it was submitted in — without them the
-        # hidden/exposed verdict would be a windowing artifact
-        t_prev = self.sim_time
+        # advance the link model one modeled iteration in a single window:
+        # the fabric clock is event-ordered, so a cross-pod (multi-hop)
+        # instant stream lands at its exact store-and-forward instant inside
+        # the iteration it was submitted in. Instant-ckpt chunks that drain
+        # before the boundary were hidden (the FCR condition, emergent from
+        # the transport instead of Eq. 2) — tracked globally and per
+        # delivering fabric edge
         self.sim_time += self.t_iter_model
-        for k in range(1, 5):
-            self.transport.run(until=t_prev + self.t_iter_model * k / 4)
+        self.transport.run(until=self.sim_time)
         tickets = []
         for w in self.workers[:self.active_dp]:
             tk = w.engine.last_instant_ticket
             if tk is None:
                 continue
             tickets.append(tk)
-            src, dst = self.transport.instant_route(w.wid)
-            # book the verdict on the fabric edge that DELIVERS the shard
-            # (the last hop): on a pod fabric, consecutive wids across a pod
-            # boundary have no direct edge, so the raw (src, dst) pair would
-            # be a phantom key invisible to per-edge summaries
-            e = edge_key(src, dst)
-            if e not in self.topology.links:
-                try:
-                    hops = self.topology.path(src, dst)
-                    e = hops[-1] if hops else e
-                except RuntimeError:
-                    pass               # mid-failure: keep the pair key
+            # book the verdict on the fabric edge that DELIVERED the shard —
+            # the last hop of the path the stream actually rode. On a pod
+            # fabric, consecutive wids across a pod boundary have no direct
+            # edge, so the raw (src, dst) pair would be a phantom key
+            # invisible to per-edge summaries
+            e = tk.delivery_edge
+            if e is None:              # single-node fabric: local delivery
+                src, dst = self.transport.instant_route(w.wid)
+                e = edge_key(src, dst)
             book = (self.edge_instant_hidden if tk.complete
                     else self.edge_instant_exposed)
             book[e] = book.get(e, 0) + 1

@@ -92,7 +92,13 @@ def schedule_state_phase(state_bytes: float, bandwidth: float, *,
     `paths` (several edge-disjoint paths) enables bidirectional routing: the
     volume is split across the paths by residual bandwidth
     (`LinkTopology.split_bytes`), so on an idle symmetric ring both
-    directions carry half and the state leg halves."""
+    directions carry half and the state leg halves.
+
+    The returned duration is exact: the fabric clock is event-ordered, so
+    `drain()` is a single pass that forwards every hop at its true arrival
+    instant — the timeline derives from one window with no horizon slack
+    (and, equivalently, would be identical measured through `run(until=)`
+    windows)."""
     if topology is not None:
         routes = [list(p) for p in paths] if paths else \
             ([list(path)] if path else None)

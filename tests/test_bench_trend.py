@@ -1,0 +1,100 @@
+"""tools/bench_trend.py: the bench-smoke trend gate fails on >20% state-leg
+regressions, passes improvements/noise in ungated rows, and tolerates a
+missing previous artifact."""
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parents[1]
+
+
+def _dump(path: Path, rows) -> Path:
+    path.write_text(json.dumps(
+        [{"name": n, "us_per_call": 0.0, "derived": d} for n, d in rows]))
+    return path
+
+
+def _run(cur: Path, prev: Path, *extra: str) -> subprocess.CompletedProcess:
+    return subprocess.run(
+        [sys.executable, str(REPO / "tools" / "bench_trend.py"),
+         "--current", str(cur), "--previous", str(prev), *extra],
+        capture_output=True, text=True)
+
+
+def test_state_leg_regression_fails(tmp_path):
+    prev = _dump(tmp_path / "p.json",
+                 [("table5/16gpu/fftrainer/state_leg_bidirectional", "0.033"),
+                  ("table5/16gpu/bidi_beats_uni", "True")])
+    cur = _dump(tmp_path / "c.json",
+                [("table5/16gpu/fftrainer/state_leg_bidirectional", "0.050"),
+                 ("table5/16gpu/bidi_beats_uni", "True")])
+    r = _run(cur, prev)
+    assert r.returncode == 1, r.stdout + r.stderr
+    assert "REGRESSION" in r.stdout
+
+
+def test_within_threshold_and_improvements_pass(tmp_path):
+    prev = _dump(tmp_path / "p.json",
+                 [("table5/sim/recovery_total_s", "10.0"),
+                  ("table5/16gpu/fftrainer/state_recovery", "0.85"),
+                  ("fig4/measured/per_iter_no_ckpt_us", "100.0")])
+    cur = _dump(tmp_path / "c.json",
+                [("table5/sim/recovery_total_s", "11.0"),   # +10% < gate
+                 ("table5/16gpu/fftrainer/state_recovery", "0.40"),  # better
+                 ("fig4/measured/per_iter_no_ckpt_us", "900.0")])    # ungated
+    r = _run(cur, prev)
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "OK" in r.stdout
+
+
+def test_missing_previous_artifact_passes(tmp_path):
+    cur = _dump(tmp_path / "c.json", [("table5/sim/recovery_total_s", "10.0")])
+    r = _run(cur, tmp_path / "absent.json")
+    assert r.returncode == 0
+    assert "nothing to gate" in r.stdout
+
+
+def test_vanished_gated_row_warns(tmp_path):
+    prev = _dump(tmp_path / "p.json",
+                 [("table5/16gpu/fftrainer/state_leg_bidirectional", "0.033")])
+    cur = _dump(tmp_path / "c.json",
+                [("table5/16gpu/fftrainer/state_leg_bidi_RENAMED", "0.05")])
+    r = _run(cur, prev)
+    assert r.returncode == 0
+    assert r.stdout.count("WARNING gated row missing") == 2  # both sides
+
+
+def test_zero_baseline_growth_is_a_regression(tmp_path):
+    prev = _dump(tmp_path / "p.json", [("table5/sim/recovery_total_s", "0.0")])
+    cur = _dump(tmp_path / "c.json", [("table5/sim/recovery_total_s", "12.0")])
+    r = _run(cur, prev)
+    assert r.returncode == 1
+    assert "REGRESSION" in r.stdout
+
+
+def test_gated_boolean_row_is_not_gated_numerically(tmp_path):
+    """bool is an int subclass: a gated row holding true/false must warn as
+    non-numeric, not fail CI as a 0->1 'regression' (or pass a True->False
+    breakage silently)."""
+    prev = _dump(tmp_path / "p.json", [("x/state_leg_ok", False)])
+    cur = _dump(tmp_path / "c.json", [("x/state_leg_ok", True)])
+    r = _run(cur, prev)
+    assert r.returncode == 0
+    assert "WARNING gated row non-numeric" in r.stdout
+
+
+def test_gated_row_turned_non_numeric_warns(tmp_path):
+    prev = _dump(tmp_path / "p.json", [("table5/sim/recovery_total_s", "3.0")])
+    cur = _dump(tmp_path / "c.json", [("table5/sim/recovery_total_s", "oops")])
+    r = _run(cur, prev)
+    assert r.returncode == 0
+    assert "WARNING gated row non-numeric" in r.stdout
+
+
+def test_custom_threshold_and_match(tmp_path):
+    prev = _dump(tmp_path / "p.json", [("x/custom_row", "1.0")])
+    cur = _dump(tmp_path / "c.json", [("x/custom_row", "1.4")])
+    assert _run(cur, prev).returncode == 0            # not gated by default
+    r = _run(cur, prev, "--match", "custom_row", "--threshold", "0.3")
+    assert r.returncode == 1

@@ -63,13 +63,34 @@ def test_state_only_uses_full_bandwidth():
     assert busy == pytest.approx(0.5, rel=1e-6)
 
 
-def test_drain_raises_when_train_denser_than_quantum():
-    """Pathological: TRAIN arrivals spaced tighter than one STATE quantum
-    forever -> STATE can never finish a quantum; drain() must not hang."""
+def test_drain_converges_when_train_denser_than_quantum():
+    """Regression (ISSUE 4): TRAIN arrivals spaced tighter than one STATE
+    quantum starved the old growing-horizon retry loop toward its
+    non-convergence RuntimeError; the single-pass event-ordered drain just
+    processes the arrivals in order and never raises."""
     sch = LinkScheduler(bandwidth=1e9, quantum=1e9)    # 1 s quanta
-    sch.submit("STATE", 2e9, t=0.0)
-    for i in range(1000):
-        sch.submit("TRAIN", 1e5, t=0.5 * i)            # every 0.5 s
-    # TRAIN eventually stops, so this DOES converge — just many rounds
+    st = sch.submit("STATE", 2e9, t=0.0)
+    trains = [sch.submit("TRAIN", 1e5, t=0.5 * i) for i in range(1000)]
     sch.drain()
     assert sch.idle
+    assert st.finished and all(tr.finished for tr in trains)
+    # STATE only completes after the last dense TRAIN arrival frees a full
+    # quantum: 999 * 0.5 s of arrivals, then 2 quanta of 1 s each
+    assert st.t_finish == pytest.approx(0.5 * 999 + 1e5 / 1e9 + 2.0,
+                                        rel=1e-6)
+
+
+def test_drain_clock_carries_no_slack():
+    """The old drain ran growing horizons and then clamped the clock back;
+    the event-ordered drain lands exactly on the last transmission end, so
+    a transfer submitted right after drain() starts at its own submit time
+    instead of being delayed by leftover horizon slack."""
+    sch = LinkScheduler(bandwidth=1e9, quantum=1e6)
+    sch.submit("STATE", 3e8, t=0.0)                    # finishes at 0.3 s
+    t_done = sch.drain()
+    assert t_done == pytest.approx(0.3, rel=1e-9)
+    assert sch.now == pytest.approx(0.3, rel=1e-9)
+    late = sch.submit("STATE", 1e8, t=0.4)
+    sch.drain()
+    assert late.t_start == pytest.approx(0.4, rel=1e-9)
+    assert late.t_finish == pytest.approx(0.5, rel=1e-9)

@@ -10,12 +10,25 @@ import pytest
 # The subprocess SPMD tests are seconds each on the 0.4.37 floor thanks to
 # repro/compat.py:shard_map_compat; only the all-families dry-run (minutes of
 # jit compiles) keeps the `slow` marker. Partial-manual shard_map still
-# CHECK-fails inside old XLA, so that one test needs AxisType-era jax (the
-# CI latest-jax matrix leg runs it).
+# CHECK-fails inside old XLA, so that one test needs AxisType-era jax. The
+# gate is a precise version bound (not a blanket feature-detect skip):
+# jax >= 0.6 is the AxisType-era line the latest-jax CI leg runs green
+# (ROADMAP), and the one whose bundled XLA carries the IsManualSubgroup
+# hlo_sharding_util fix. Dev/rc suffixes are ignored by the digit parse.
+_JAX_FLOOR_FOR_PARTIAL_MANUAL = (0, 6, 0)
+
+
+def _jax_version_tuple():
+    import re
+    jax = pytest.importorskip("jax")
+    return tuple(int(x) for x in re.findall(r"\d+", jax.__version__)[:3])
+
+
 requires_axis_type = pytest.mark.skipif(
-    not hasattr(pytest.importorskip("jax").sharding, "AxisType"),
+    _jax_version_tuple() < _JAX_FLOOR_FOR_PARTIAL_MANUAL,
     reason="partial-manual shard_map CHECK-fails in pre-AxisType XLA "
-           "(hlo_sharding_util IsManualSubgroup); needs fresh jax")
+           "(hlo_sharding_util IsManualSubgroup); needs jax >= "
+           + ".".join(map(str, _JAX_FLOOR_FOR_PARTIAL_MANUAL)))
 
 
 def _run(script: str, timeout: int = 560) -> str:

@@ -1,0 +1,122 @@
+"""Trend gate for the bench-smoke JSON artifacts.
+
+The CI benchmark job uploads `BENCH_*.json` row dumps
+(`benchmarks/common.py:dump_rows`) on every commit. This tool diffs the
+current run against the previous commit's artifact and FAILS (exit 1) when
+a gated row regressed by more than the threshold — so a change that slows
+the simulated failover state leg can't land silently.
+
+Gated rows are the state-leg rows of table5 (simulated seconds, fully
+deterministic — a 20% jump is a real model regression, not runner noise):
+any row whose name contains one of the `--match` substrings, default
+``state_leg`` / ``state_recovery`` / ``recovery_total_s``. All other
+numeric rows are reported informationally. Non-numeric derived values
+(booleans, labels) are skipped — unless the row is gated, in which case a
+WARNING prints so the gate can't be disabled silently; likewise for a
+gated row present on only one side (renamed/removed). A gated zero
+baseline that goes positive counts as a regression (unbounded relative
+growth). A missing previous artifact (first run, expired retention)
+passes with a note.
+
+Usage:
+    python tools/bench_trend.py --current bench-out/BENCH_table5.json \
+        --previous prev/BENCH_table5.json [--threshold 0.2] [--match SUBSTR]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+from typing import Dict, List, Optional, Sequence, Tuple
+
+DEFAULT_MATCH = ("state_leg", "state_recovery", "recovery_total_s")
+DEFAULT_THRESHOLD = 0.2
+
+
+def _rows(path: Path) -> Dict[str, dict]:
+    return {r["name"]: r for r in json.loads(path.read_text())}
+
+
+def _numeric(value) -> Optional[float]:
+    if isinstance(value, bool):
+        return None                    # bool is an int subclass: not a time
+    try:
+        return float(value)
+    except (TypeError, ValueError):
+        return None
+
+
+def compare(current: Path, previous: Path,
+            match: Sequence[str] = DEFAULT_MATCH,
+            threshold: float = DEFAULT_THRESHOLD
+            ) -> Tuple[List[str], List[str]]:
+    """Diff two row dumps. Returns (report_lines, regressed_row_names):
+    a gated row regresses when its derived value grew by more than
+    `threshold` relative to the previous run (larger = slower for every
+    gated row, all of which are seconds)."""
+    cur, prev = _rows(current), _rows(previous)
+    lines, regressions = [], []
+    for name in sorted(set(cur) | set(prev)):
+        cv = _numeric(cur[name]["derived"]) if name in cur else None
+        pv = _numeric(prev[name]["derived"]) if name in prev else None
+        gated = any(m in name for m in match)
+        if cv is None or pv is None:
+            if gated:
+                # a gated row vanishing (rename/removal) or turning
+                # non-numeric must not silently disable its regression gate
+                why = ("missing from the "
+                       + ("previous" if name in cur else "current") + " run"
+                       if (name in cur) != (name in prev)
+                       else "non-numeric")
+                lines.append(f"{name}: WARNING gated row {why} — "
+                             "its gate did not apply")
+            continue
+        if pv > 0:
+            delta_str = f"{(cv - pv) / pv:+.1%}"
+        else:
+            delta_str = "new load" if cv > 0 else "+0.0%"
+        tag = " [gated]" if gated else ""
+        # pv == 0 with any growth counts: a zero baseline going positive is
+        # unbounded relative growth, not a free pass
+        if gated and cv > pv * (1.0 + threshold) and cv > pv:
+            regressions.append(name)
+            tag = f" << REGRESSION (> {threshold:.0%})"
+        lines.append(f"{name}: {pv:.6g} -> {cv:.6g} ({delta_str}){tag}")
+    return lines, regressions
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--current", required=True, type=Path,
+                    help="this run's BENCH_*.json")
+    ap.add_argument("--previous", required=True, type=Path,
+                    help="the previous commit's artifact of the same table")
+    ap.add_argument("--threshold", type=float, default=DEFAULT_THRESHOLD,
+                    help="relative growth that fails a gated row "
+                         "(default 0.2 = +20%%)")
+    ap.add_argument("--match", action="append", default=None,
+                    metavar="SUBSTR",
+                    help="gate rows whose name contains SUBSTR "
+                         f"(repeatable; default {list(DEFAULT_MATCH)})")
+    args = ap.parse_args(argv)
+    if not args.previous.exists():
+        print(f"bench-trend: no previous artifact at {args.previous} "
+              "(first run or expired retention) — nothing to gate")
+        return 0
+    lines, regressions = compare(args.current, args.previous,
+                                 match=args.match or DEFAULT_MATCH,
+                                 threshold=args.threshold)
+    print(f"bench-trend: {args.previous} -> {args.current}")
+    for line in lines:
+        print("  " + line)
+    if regressions:
+        print(f"bench-trend: FAIL — {len(regressions)} gated row(s) "
+              f"regressed > {args.threshold:.0%}: {regressions}")
+        return 1
+    print("bench-trend: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
