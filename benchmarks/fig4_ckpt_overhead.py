@@ -22,13 +22,14 @@ def _measured(tmp: Path, tiny: bool = False) -> None:
     # simulator does in-process (shard serialization + per-chunk CRC32), so
     # overhead_frac upper-bounds the paper's razor+ring-copy cost; on real
     # hardware the permute is an in-step collective the compiler overlaps.
-    from repro.runtime.cluster import SimCluster
+    from repro.runtime.cluster import ClusterConfig, SimCluster
     cfg = dataclasses.replace(reduce_for_smoke(get_arch("qwen3-0.6b")),
                               dtype="float32")
     base, inst = [], []
     for with_ckpt in (False, True):
-        clu = SimCluster(cfg, dp=4, global_batch=8, seq_len=16,
-                         ckpt_dir=tmp / f"c{with_ckpt}", full_every=10**9)
+        clu = SimCluster(cfg, cluster=ClusterConfig(
+            dp=4, global_batch=8, seq_len=16,
+            ckpt_dir=tmp / f"c{with_ckpt}", full_every=10**9))
         if not with_ckpt:
             clu._shard_and_backup = lambda: None  # disable instant ckpt
         warm, meas = (1, 2) if tiny else (3, 5)

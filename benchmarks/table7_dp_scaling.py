@@ -10,7 +10,7 @@ from benchmarks.common import row
 from repro.configs import get_arch, reduce_for_smoke
 from repro.core.razor import razor_bytes_formula
 from repro.models import param_count
-from repro.runtime.cluster import SimCluster
+from repro.runtime.cluster import ClusterConfig, SimCluster
 
 
 def run(tmp: Path = Path("/tmp/repro_bench_t7")) -> None:
@@ -19,9 +19,9 @@ def run(tmp: Path = Path("/tmp/repro_bench_t7")) -> None:
     for dp in (2, 4, 8):
         times = {}
         for with_ckpt in (False, True):
-            clu = SimCluster(cfg, dp=dp, global_batch=2 * dp, seq_len=16,
-                             ckpt_dir=tmp / f"dp{dp}_{with_ckpt}",
-                             full_every=10**9)
+            clu = SimCluster(cfg, cluster=ClusterConfig(
+                dp=dp, global_batch=2 * dp, seq_len=16,
+                ckpt_dir=tmp / f"dp{dp}_{with_ckpt}", full_every=10**9))
             if not with_ckpt:
                 clu._shard_and_backup = lambda: None
             clu.run(2)

@@ -10,12 +10,12 @@ from pathlib import Path
 import numpy as np
 
 from repro.configs import get_arch, reduce_for_smoke
-from repro.runtime.cluster import SimCluster
+from repro.runtime.cluster import ClusterConfig, SimCluster
 
 cfg = dataclasses.replace(reduce_for_smoke(get_arch("gemma-2b")),
                           dtype="float32")
-cluster = SimCluster(cfg, dp=4, global_batch=8, seq_len=16,
-                     ckpt_dir=Path("/tmp/elastic_ckpt"))
+cluster = SimCluster(cfg, cluster=ClusterConfig(
+    dp=4, global_batch=8, seq_len=16, ckpt_dir=Path("/tmp/elastic_ckpt")))
 
 print("dp=4:", [f"{l:.3f}" for l in cluster.run(3)])
 

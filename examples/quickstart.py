@@ -8,13 +8,14 @@ from pathlib import Path
 
 from repro.configs import get_arch, reduce_for_smoke
 from repro.optim import AdamWConfig
-from repro.runtime.cluster import SimCluster
+from repro.runtime.cluster import ClusterConfig, SimCluster
 
 cfg = dataclasses.replace(reduce_for_smoke(get_arch("qwen3-0.6b")),
                           dtype="float32")
-cluster = SimCluster(cfg, dp=4, global_batch=8, seq_len=16,
-                     ckpt_dir=Path("/tmp/quickstart_ckpt"),
-                     hp=AdamWConfig(lr=1e-3, warmup_steps=2, total_steps=50))
+cluster = SimCluster(cfg, cluster=ClusterConfig(
+    dp=4, global_batch=8, seq_len=16,
+    ckpt_dir=Path("/tmp/quickstart_ckpt"),
+    hp=AdamWConfig(lr=1e-3, warmup_steps=2, total_steps=50)))
 
 print("training 5 steps...")
 for loss in cluster.run(5):

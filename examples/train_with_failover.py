@@ -16,7 +16,8 @@ import numpy as np
 
 from repro.configs import ArchConfig, register
 from repro.optim import AdamWConfig
-from repro.runtime.cluster import SimCluster
+from repro.runtime.cluster import (ClusterConfig, FabricConfig, FaultScript,
+                                   SimCluster)
 
 ap = argparse.ArgumentParser()
 ap.add_argument("--steps", type=int, default=200)
@@ -30,12 +31,15 @@ cfg = ArchConfig(
     mlp_type="swiglu", dtype="float32", remat_policy="none")
 fail_at = args.fail_at if args.fail_at is not None else args.steps // 2
 
-cluster = SimCluster(cfg, dp=4, global_batch=4, seq_len=128,
-                     dataset_size=8192,
-                     ckpt_dir=Path("/tmp/failover_demo_ckpt"), full_every=100,
-                     quantum=1 << 18,
-                     hp=AdamWConfig(lr=3e-4, warmup_steps=20,
-                                    total_steps=args.steps))
+cluster = SimCluster(
+    cfg,
+    cluster=ClusterConfig(dp=4, global_batch=4, seq_len=128,
+                          dataset_size=8192,
+                          ckpt_dir=Path("/tmp/failover_demo_ckpt"),
+                          full_every=100,
+                          hp=AdamWConfig(lr=3e-4, warmup_steps=20,
+                                         total_steps=args.steps)),
+    fabric=FabricConfig(quantum=1 << 18))
 n_params = sum(int(np.prod(x.shape))
                for x in jax.tree.leaves(cluster.state["params"]))
 print(f"model: {n_params/1e6:.1f}M params, dp=4, seq 128")
@@ -46,7 +50,7 @@ for step in range(args.steps):
         print(f"\n[{step}] HARDWARE FAILURE on worker 0 "
               f"(host RAM lost; neighbor holds its shard)")
         cluster.inject_failure([0], hardware=True)
-        rep = cluster.recover(hardware=True)
+        rep = cluster.recover(FaultScript(hardware=True))
         print(f"[{step}] recovered via {rep.recovered_from}, rollback="
               f"{rep.rolled_back_iterations}, {rep.chunks_sent} state "
               f"chunks streamed, modeled MTTR={rep.total_time:.1f}s\n")
@@ -68,13 +72,14 @@ print("training improved the loss through a failure — OK")
 # ---------------------------------------------------------------------------
 print("\n--- multi-failure: second failure mid-transfer ---")
 cluster.inject_failure([1], hardware=True)
-partial = cluster.recover(hardware=True, interrupt_after_chunks=4)
+partial = cluster.recover(FaultScript(hardware=True,
+                                      interrupt_after_chunks=4))
 print(f"transfer interrupted after {partial.chunks_sent}/"
       f"{partial.chunks_total} chunks (second failure strikes)")
 assert partial.kind == "interrupted"
 
 cluster.inject_failure([3], hardware=True)
-rep2 = cluster.recover(hardware=True)
+rep2 = cluster.recover(FaultScript(hardware=True))
 print(f"resumed: reused {rep2.chunks_reused} partial chunks, streamed "
       f"{rep2.chunks_sent} more ({rep2.chunks_total} total), rollback="
       f"{rep2.rolled_back_iterations}")

@@ -1,0 +1,66 @@
+"""Public API of the FFTrainer reproduction.
+
+The stable import surface — everything else under `repro.*` is
+implementation detail and may move between releases:
+
+    from repro import SimCluster, ClusterConfig, FabricConfig, FaultScript
+    from repro import RecoveryPolicy, StreamRecovery, ComputeRecovery
+    from repro import HybridRecovery, RecoveryError
+    from repro import fftrainer_timeline, baseline_timeline
+    from repro import compute_recovery_timeline, PodFabric
+
+The list is pinned by `tools/check_docs.py` (CI `docs` job), so it cannot
+drift from the README/docs. Imports are lazy: touching `repro.SimCluster`
+pulls in jax + the runtime, plain `import repro` stays light.
+"""
+from __future__ import annotations
+
+__all__ = [
+    "SimCluster",
+    "ClusterConfig",
+    "FabricConfig",
+    "FaultScript",
+    "RecoveryPolicy",
+    "RecoveryPlan",
+    "RecoveryReport",
+    "RecoveryError",
+    "StreamRecovery",
+    "ComputeRecovery",
+    "HybridRecovery",
+    "fftrainer_timeline",
+    "baseline_timeline",
+    "compute_recovery_timeline",
+    "PodFabric",
+]
+
+_EXPORTS = {
+    "SimCluster": "repro.runtime.cluster",
+    "ClusterConfig": "repro.runtime.cluster",
+    "FabricConfig": "repro.runtime.cluster",
+    "FaultScript": "repro.runtime.recovery",
+    "RecoveryPolicy": "repro.runtime.recovery",
+    "RecoveryPlan": "repro.runtime.recovery",
+    "RecoveryReport": "repro.runtime.recovery",
+    "RecoveryError": "repro.runtime.recovery",
+    "StreamRecovery": "repro.runtime.recovery",
+    "ComputeRecovery": "repro.runtime.recovery",
+    "HybridRecovery": "repro.runtime.recovery",
+    "fftrainer_timeline": "repro.runtime.failover",
+    "baseline_timeline": "repro.runtime.failover",
+    "compute_recovery_timeline": "repro.runtime.failover",
+    "PodFabric": "repro.core.lccl",
+}
+
+
+def __getattr__(name: str):
+    mod = _EXPORTS.get(name)
+    if mod is None:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+    import importlib
+    value = getattr(importlib.import_module(mod), name)
+    globals()[name] = value            # cache: resolve each name once
+    return value
+
+
+def __dir__():
+    return sorted(set(globals()) | set(__all__))

@@ -305,6 +305,19 @@ class _NackingTransport:
         self.nacks_sent = 0
         self._corrupt_once: Dict[Tuple[str, int], int] = {}
 
+    def accounting(self) -> Dict[str, float]:
+        """Plan-level byte accounting snapshot: what this transport has put
+        on the wire so far, by traffic class. Recovery policies diff two
+        snapshots around an `execute()` to bill a plan for exactly the
+        STATE bytes it streamed (a `ComputeRecovery` bill is zero)."""
+        return {
+            "train_bytes": float(self.train_bytes_submitted),
+            "state_bytes": float(self.state_bytes_submitted),
+            "chunks_delivered": float(self.chunks_delivered),
+            "nacks_sent": float(self.nacks_sent),
+            "streams_sent": float(self.streams_sent),
+        }
+
     def corrupt_once(self, stream_id: str, seq: int, times: int = 1) -> None:
         """Arrange for the next `times` deliveries of (stream_id, seq) to
         arrive with a flipped byte — exercises the CRC-reject -> NACK path

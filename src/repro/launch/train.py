@@ -52,12 +52,20 @@ def main() -> None:
                          "edges) instead of a single-worker failure")
     ap.add_argument("--storm-edge-failures", type=int, default=1,
                     help="extra correlated edge failures in the storm")
+    ap.add_argument("--recovery-policy", choices=("stream", "compute",
+                                                  "hybrid"),
+                    default="stream",
+                    help="how failed workers get their state back: stream "
+                         "it from neighbor backups (FFTrainer), replay "
+                         "compute to rebuild it checkpoint-free, or race "
+                         "both per worker")
     args = ap.parse_args()
 
     from repro.configs import get_arch, reduce_for_smoke
     from repro.core.lccl import edge_key
     from repro.optim import AdamWConfig
-    from repro.runtime.cluster import SimCluster
+    from repro.runtime.cluster import (ClusterConfig, FabricConfig,
+                                       FaultScript, SimCluster)
 
     cfg = get_arch(args.arch)
     if args.smoke:
@@ -69,12 +77,17 @@ def main() -> None:
         edge_bw = {edge_key(*args.hotspot_edge): args.hotspot_bw}
 
     clu = SimCluster(
-        cfg, dp=args.dp, global_batch=args.global_batch,
-        seq_len=args.seq_len, ckpt_dir=Path(args.ckpt_dir),
-        full_every=args.full_every, link_bw=args.link_bw,
-        topology=args.topology, edge_bw=edge_bw,
-        pods=args.pods, dcn_bw=args.dcn_bw, dcn_latency=args.edge_latency,
-        hp=AdamWConfig(warmup_steps=5, total_steps=max(args.steps, 10)))
+        cfg,
+        cluster=ClusterConfig(
+            dp=args.dp, global_batch=args.global_batch,
+            seq_len=args.seq_len, ckpt_dir=Path(args.ckpt_dir),
+            full_every=args.full_every,
+            hp=AdamWConfig(warmup_steps=5, total_steps=max(args.steps, 10))),
+        fabric=FabricConfig(
+            link_bw=args.link_bw, topology=args.topology, edge_bw=edge_bw,
+            pods=args.pods, dcn_bw=args.dcn_bw,
+            dcn_latency=args.edge_latency),
+        recovery=args.recovery_policy)
 
     t0 = time.time()
     for step in range(args.steps):
@@ -90,10 +103,14 @@ def main() -> None:
                 print(f"[failover] injecting failure at step {step}")
                 clu.inject_failure([1], hardware=args.hardware_failure)
             if any(not w.alive for w in clu.workers):
-                rep = clu.recover(hardware=args.hardware_failure)
-                print(f"[failover] recovered from {rep.recovered_from} in "
-                      f"{rep.total_time:.1f}s (modeled), rollback="
-                      f"{rep.rolled_back_iterations} iterations")
+                rep = clu.recover(
+                    FaultScript(hardware=args.hardware_failure))
+                print(f"[failover] recovered from {rep.recovered_from} "
+                      f"({rep.policy} policy) in {rep.total_time:.1f}s "
+                      f"(modeled), rollback="
+                      f"{rep.rolled_back_iterations} iterations, "
+                      f"state streamed {rep.state_bytes_streamed / 1e6:.1f} "
+                      f"MB, replay compute {rep.compute_seconds:.2f}s")
             else:
                 # a flat-fabric storm only darkens edges (no pods to kill):
                 # training continues, streams route around the damage

@@ -19,9 +19,10 @@ from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 from dataclasses import dataclass, field
 from pathlib import Path
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -40,33 +41,76 @@ from repro.data.indexer import TidIndexer
 from repro.data.loader import PrefetchingLoader, SyntheticTokens
 from repro.models import build_model
 from repro.optim import AdamWConfig, adamw_update, cast_params, cosine_schedule
-from repro.runtime.failover import FailoverCosts
+# recovery machinery lives in runtime/recovery.py; the vector/shard helpers
+# and RecoveryReport are re-exported here for back-compat imports
+from repro.runtime.recovery import (FaultScript, RecoveryError, RecoveryPlan,
+                                    RecoveryPolicy, RecoveryReport,
+                                    StreamRecovery, _flatten_opt,
+                                    _unflatten_opt, orchestration_timeline,
+                                    resolve_policy, shard_slices)
 from repro.train.state import init_state
 from repro.train.step import step_traffic, submit_step_traffic
 
 PyTree = Any
 
-
-def _flatten_opt(opt: PyTree) -> Tuple[np.ndarray, Any]:
-    leaves, treedef = jax.tree_util.tree_flatten(opt)
-    vec = np.concatenate([np.asarray(l, np.float32).ravel() for l in leaves])
-    shapes = [(l.shape, l.dtype) for l in leaves]
-    return vec, (treedef, shapes)
-
-
-def _unflatten_opt(vec: np.ndarray, meta) -> PyTree:
-    treedef, shapes = meta
-    leaves, off = [], 0
-    for shape, dtype in shapes:
-        n = int(np.prod(shape))
-        leaves.append(vec[off:off + n].reshape(shape).astype(dtype))
-        off += n
-    return jax.tree_util.tree_unflatten(treedef, leaves)
+__all__ = [
+    "ClusterConfig", "FabricConfig", "FaultScript", "RecoveryError",
+    "RecoveryPlan", "RecoveryPolicy", "RecoveryReport", "SimCluster",
+    "Worker", "shard_slices",
+]
 
 
-def shard_slices(n: int, dp: int) -> List[slice]:
-    per = (n + dp - 1) // dp
-    return [slice(i * per, min((i + 1) * per, n)) for i in range(dp)]
+# --------------------------------------------------------------------------- #
+# Configuration surface (replaces the old 17-kwarg constructor sprawl)
+# --------------------------------------------------------------------------- #
+@dataclass(frozen=True)
+class ClusterConfig:
+    """Model/batch knobs of a simulated cluster (what trains)."""
+    dp: int = 4
+    global_batch: int = 8
+    seq_len: int = 16
+    dataset_size: int = 4096
+    hp: AdamWConfig = field(
+        default_factory=lambda: AdamWConfig(warmup_steps=2, total_steps=100))
+    ckpt_dir: Path = Path("/tmp/repro_ckpt")
+    full_every: int = 50
+    seed: int = 0
+    t_iter_model: float = 0.05         # modeled wall seconds per iteration
+
+
+@dataclass(frozen=True)
+class FabricConfig:
+    """Fabric knobs of a simulated cluster (what the bytes ride)."""
+    link_bw: float = 50e9
+    quantum: int = DEFAULT_QUANTUM
+    topology: str = "ring"
+    edge_bw: Optional[Dict[Edge, float]] = None
+    pods: int = 1
+    dcn_bw: float = 5e9
+    ici_latency: float = 0.0
+    dcn_latency: float = 0.0
+
+
+_CLUSTER_FIELDS = {f.name for f in dataclasses.fields(ClusterConfig)}
+_FABRIC_FIELDS = {f.name for f in dataclasses.fields(FabricConfig)}
+LEGACY_CLUSTER_KWARGS = _CLUSTER_FIELDS | _FABRIC_FIELDS
+
+
+def _split_legacy_kwargs(kw: Dict[str, Any],
+                         cluster: Optional[ClusterConfig],
+                         fabric: Optional[FabricConfig]
+                         ) -> Tuple[ClusterConfig, FabricConfig]:
+    """Fold flat legacy constructor kwargs into the two config dataclasses
+    (over whatever explicit configs were also passed)."""
+    unknown = set(kw) - LEGACY_CLUSTER_KWARGS
+    if unknown:
+        raise TypeError(f"SimCluster got unexpected keyword argument(s) "
+                        f"{sorted(unknown)}")
+    c_over = {k: v for k, v in kw.items() if k in _CLUSTER_FIELDS}
+    f_over = {k: v for k, v in kw.items() if k in _FABRIC_FIELDS}
+    cc = dataclasses.replace(cluster or ClusterConfig(), **c_over)
+    fc = dataclasses.replace(fabric or FabricConfig(), **f_over)
+    return cc, fc
 
 
 @dataclass
@@ -79,47 +123,47 @@ class Worker:
     step_times: List[float] = field(default_factory=list)
 
 
-@dataclass
-class RecoveryReport:
-    kind: str                          # software | hardware | fallback | interrupted
-    recovered_from: str                # neighbor | full_ckpt | neighbor_partial
-    resume_iteration: int
-    rolled_back_iterations: int
-    timeline: Dict[str, float]
-    total_time: float
-    elastic_dp: Optional[int] = None
-    # StateStream chunk accounting for (partial, resumable) transfers
-    chunks_total: int = 0              # chunks the recovery needs overall
-    chunks_sent: int = 0               # chunks moved in THIS attempt
-    chunks_reused: int = 0             # chunks surviving from a prior attempt
-
-
 class SimCluster:
-    def __init__(self, cfg: ArchConfig, *, dp: int = 4,
-                 global_batch: int = 8, seq_len: int = 16,
-                 dataset_size: int = 4096,
-                 hp: AdamWConfig = AdamWConfig(warmup_steps=2, total_steps=100),
-                 ckpt_dir: Path = Path("/tmp/repro_ckpt"),
-                 full_every: int = 50, seed: int = 0,
-                 link_bw: float = 50e9, quantum: int = DEFAULT_QUANTUM,
-                 t_iter_model: float = 0.05, topology: str = "ring",
-                 edge_bw: Optional[Dict[Edge, float]] = None,
-                 pods: int = 1, dcn_bw: float = 5e9,
-                 ici_latency: float = 0.0, dcn_latency: float = 0.0):
+    def __init__(self, cfg: ArchConfig,
+                 cluster: Optional[ClusterConfig] = None,
+                 fabric: Optional[FabricConfig] = None,
+                 recovery: Union[str, RecoveryPolicy, None] = None,
+                 **legacy):
+        """Build a simulated cluster from `ClusterConfig` (model/batch
+        knobs) + `FabricConfig` (link knobs) + a recovery policy
+        ("stream" | "compute" | "hybrid" or a `RecoveryPolicy` instance).
+
+        The old flat kwargs (`dp=`, `link_bw=`, ...) still work but emit a
+        `DeprecationWarning`; see also `SimCluster.from_kwargs`."""
+        if legacy:
+            # unknown names are a TypeError (as a real signature would
+            # raise), not a deprecation — check before warning
+            cluster, fabric = _split_legacy_kwargs(legacy, cluster, fabric)
+            warnings.warn(
+                f"SimCluster flat keyword(s) {sorted(legacy)} are "
+                "deprecated; pass cluster=ClusterConfig(...) and "
+                "fabric=FabricConfig(...) instead",
+                DeprecationWarning, stacklevel=2)
+        cc = cluster if cluster is not None else ClusterConfig()
+        fc = fabric if fabric is not None else FabricConfig()
+        self.cluster_config = cc
+        self.fabric_config = fc
+        self.recovery_policy: RecoveryPolicy = resolve_policy(recovery)
+        dp, global_batch, seed = cc.dp, cc.global_batch, cc.seed
         self.cfg = cfg
         self.dp = dp
         self.active_dp = dp
         self.global_batch = global_batch
-        self.seq_len = seq_len
-        self.hp = hp
+        self.seq_len = cc.seq_len
+        self.hp = cc.hp
         self.model = build_model(cfg)
         self.state = init_state(self.model, jax.random.key(seed))
         self.iteration = 0
         self.controller = StateController(dp=dp, pp=1, tp=1,
                                           global_batch=global_batch)
-        self.indexer = TidIndexer(dataset_size, global_batch, seed=seed)
-        self.source = SyntheticTokens(dataset_size, seq_len, cfg.vocab_size,
-                                      seed=seed)
+        self.indexer = TidIndexer(cc.dataset_size, global_batch, seed=seed)
+        self.source = SyntheticTokens(cc.dataset_size, cc.seq_len,
+                                      cfg.vocab_size, seed=seed)
         self.detection = DetectionTimeline()
         # per-link fabric: one LinkScheduler per edge. The train loop's
         # allreduce volume loads every edge (TRAIN, per tier on a pod
@@ -129,20 +173,20 @@ class SimCluster:
         # workers are grouped into that many ICI rings joined by a DCN
         # gateway ring (`PodFabric`) — cross-pod streams pay the DCN
         # bandwidth and per-hop latency
-        self.quantum = quantum
-        self.link_bw = link_bw
-        self.topology_kind = topology
-        self.t_iter_model = t_iter_model
+        self.quantum = fc.quantum
+        self.link_bw = fc.link_bw
+        self.topology_kind = fc.topology
+        self.t_iter_model = cc.t_iter_model
         self.sim_time = 0.0
-        self.pods = pods
-        self.dcn_bw = dcn_bw
-        self.ici_latency = ici_latency
-        self.dcn_latency = dcn_latency
-        if pods > 1 and dp % pods != 0:
+        self.pods = fc.pods
+        self.dcn_bw = fc.dcn_bw
+        self.ici_latency = fc.ici_latency
+        self.dcn_latency = fc.dcn_latency
+        if fc.pods > 1 and dp % fc.pods != 0:
             raise ValueError(
-                f"pods={pods} must divide dp={dp} to build a PodFabric "
+                f"pods={fc.pods} must divide dp={dp} to build a PodFabric "
                 f"(every pod gets dp/pods workers)")
-        self.topology = self._build_fabric(dp, edge_bw)
+        self.topology = self._build_fabric(dp, fc.edge_bw)
         self.transport = TopologyTransport(self.topology)
         self.last_storm: Optional[StormReport] = None
         self.instant_hidden = 0        # instant-ckpt drained within the iter
@@ -150,8 +194,9 @@ class SimCluster:
         # per-edge view of the same condition (adjacent ring edge per worker)
         self.edge_instant_hidden: Dict[Edge, int] = {}
         self.edge_instant_exposed: Dict[Edge, int] = {}
-        eng_cfg = CkptEngineConfig(out_dir=Path(ckpt_dir),
-                                   full_every=full_every, quantum=quantum)
+        eng_cfg = CkptEngineConfig(out_dir=Path(cc.ckpt_dir),
+                                   full_every=cc.full_every,
+                                   quantum=fc.quantum)
         self.workers = [
             Worker(w,
                    engine=CkptEngine(dataclasses.replace(eng_cfg), worker_id=w,
@@ -171,6 +216,32 @@ class SimCluster:
         self._layout: Optional[Dict[str, Any]] = None
         self._lazy_done_at: Optional[int] = None
         self.loss_history: List[float] = []
+
+    @classmethod
+    def from_kwargs(cls, cfg: ArchConfig,
+                    recovery: Union[str, RecoveryPolicy, None] = None,
+                    **kw) -> "SimCluster":
+        """Deprecated shim for the old flat-kwarg constructor
+        (`SimCluster.from_kwargs(cfg, dp=4, link_bw=50e9, ...)`). Use
+        `SimCluster(cfg, cluster=ClusterConfig(...),
+        fabric=FabricConfig(...))` instead."""
+        warnings.warn(
+            "SimCluster.from_kwargs is a deprecated back-compat shim; "
+            "pass cluster=ClusterConfig(...) and fabric=FabricConfig(...) "
+            "to SimCluster directly",
+            DeprecationWarning, stacklevel=2)
+        cc, fc = _split_legacy_kwargs(kw, None, None)
+        return cls(cfg, cluster=cc, fabric=fc, recovery=recovery)
+
+    def shard_nbytes(self) -> float:
+        """Bytes of one worker's unique optimizer-state shard under the
+        snapshot layout (float32 flattened vector / layout dp) — the volume
+        a recovery policy must move or recompute per failed worker."""
+        n = int(sum(int(np.prod(l.shape))
+                    for l in jax.tree.leaves(self.state["opt"])))
+        ldp = self._shard_layout()[0]
+        per = (n + ldp - 1) // ldp
+        return float(per * 4)
 
     # ------------------------------------------------------------------ #
     def _build_fabric(self, dp: int,
@@ -381,20 +452,36 @@ class SimCluster:
                 return False
         return True
 
-    def recover(self, *, hardware: bool = False,
-                interrupt_after_chunks: Optional[int] = None,
-                corrupt_chunks: int = 0) -> RecoveryReport:
-        """Recover every failed worker.
+    def recover(self, faults: Optional[FaultScript] = None, *,
+                policy: Union[str, RecoveryPolicy, None] = None,
+                **legacy) -> RecoveryReport:
+        """Recover every failed worker via a `RecoveryPolicy`.
 
-        `interrupt_after_chunks` models a SECOND failure striking mid-
-        transfer: the recovery stream stops after that many chunks, workers
-        stay down, and the partially-received chunks are retained — the next
-        `recover()` call resumes from them instead of starting over.
+        `faults` scripts what goes wrong DURING recovery (hardware loss,
+        mid-transfer interruption, wire corruption) — see `FaultScript`.
+        The old flat keywords (`hardware=`, `interrupt_after_chunks=`,
+        `corrupt_chunks=`) still work but emit a `DeprecationWarning`.
 
-        `corrupt_chunks` flips a byte in that many recovery chunks on the
-        wire (the first missing chunks, stream by stream in worker order):
-        the CRC rejects them and the NACK path retransmits — recovery must
-        heal with no rollback."""
+        `policy` overrides the cluster's configured recovery policy for
+        this one recovery ("stream" | "compute" | "hybrid" or an
+        instance). A policy that cannot honor the fault script (e.g.
+        interrupting a chunk transfer it never performs) raises
+        `RecoveryError`."""
+        if legacy:
+            unknown = set(legacy) - {"hardware", "interrupt_after_chunks",
+                                     "corrupt_chunks"}
+            if unknown:
+                raise TypeError(f"recover() got unexpected keyword "
+                                f"argument(s) {sorted(unknown)}")
+            warnings.warn(
+                f"recover({', '.join(sorted(legacy))}=...) keywords are "
+                "deprecated; pass faults=FaultScript(...) instead",
+                DeprecationWarning, stacklevel=2)
+            base = faults or FaultScript()
+            faults = dataclasses.replace(base, **legacy)
+        faults = faults or FaultScript()
+        pol = resolve_policy(policy) if policy is not None \
+            else self.recovery_policy
         failed = [w.wid for w in self.workers if not w.alive]
         assert failed, "no failed workers"
         # replacement pods come up before state moves: their ring edges
@@ -402,10 +489,7 @@ class SimCluster:
         # recovery paths route around it
         for wid in failed:
             self.topology.restore_node(wid)
-        timeline: Dict[str, float] = {}
-        timeline["detection"] = self.detection.detection_time()
-        timeline["pod_creation"] = 7.0 if hardware else 0.5
-        timeline["dependency_install"] = 0.0
+        timeline = orchestration_timeline(self, faults)
 
         # lazy backup: healthy DP rank 0 persists redundant state (params).
         # It goes on the wire NOW, overlapping the detection/pod-creation
@@ -419,26 +503,16 @@ class SimCluster:
                                      {"params": self.state["params"]},
                                      is_dp_rank0=True, t=self.sim_time)
             self._lazy_done_at = self.iteration
-        t_orch = (timeline["detection"] + timeline["pod_creation"] +
-                  timeline["dependency_install"])
+        t_orch = sum(timeline.values())
 
-        if self._recoverable_from_neighbors(failed):
-            report = self._recover_from_neighbors(
-                failed, timeline, hardware, interrupt_after_chunks,
-                t_start=self.sim_time + t_orch,
-                corrupt_chunks=corrupt_chunks)
-            if report.kind == "interrupted":
-                # workers stay down; their edges go dark again
-                for wid in failed:
-                    self.topology.fail_node(wid)
-                return report          # partial chunks retained
-        else:
-            if interrupt_after_chunks is not None:
-                raise ValueError(
-                    "interrupt_after_chunks models a failure mid neighbor-"
-                    "stream; this recovery fell back to the full checkpoint "
-                    "(no resumable chunk transfer to interrupt)")
-            report = self._recover_from_full(failed, timeline)
+        plan = pol.plan(self, failed, faults, timeline=timeline,
+                        t_start=self.sim_time + t_orch)
+        report = pol.execute(plan)
+        if report.kind == "interrupted":
+            # workers stay down; their edges go dark again
+            for wid in failed:
+                self.topology.fail_node(wid)
+            return report              # partial chunks retained
 
         for wid in failed:
             self.workers[wid].alive = True
@@ -453,169 +527,6 @@ class SimCluster:
                 self.topology.restore_edge(*e)
             self.last_storm = None
         return report
-
-    def _recover_from_neighbors(self, failed, timeline, hardware,
-                                interrupt_after_chunks=None,
-                                t_start: Optional[float] = None,
-                                corrupt_chunks: int = 0) -> RecoveryReport:
-        ldp, old_of, new_of = self._shard_layout()
-        # consistency: earliest globally-available version (§4.2), over the
-        # snapshot layout's shard slices
-        versions = {}
-        for o in range(ldp):
-            kind, src_wid = self._slice_source(o, ldp, new_of)
-            keeper = (self.workers[src_wid].engine.own if kind == "own"
-                      else self.workers[src_wid].engine.neighbor)
-            versions[o] = keeper.latest().iteration
-        target = min(versions.values())
-        rolled = self.iteration - target
-        # drop partial transfers aimed at a version we no longer want
-        self._pending_recovery = {k: v for k, v in
-                                  self._pending_recovery.items()
-                                  if k[1] == target}
-
-        # ---- move the failed workers' shards as chunked STATE traffic ----
-        # each stream rides the shortest LIVE edge path holder -> newcomer:
-        # adjacent edge normally, multi-hop around dark nodes/edges otherwise
-        t0 = self.sim_time if t_start is None else t_start
-        chunks_total = chunks_sent = chunks_reused = 0
-        tickets, inflight = [], {}
-        budget = interrupt_after_chunks
-        corrupt_left = corrupt_chunks
-        interrupted = False
-        for wid in sorted(failed):
-            holder_wid = new_of[(old_of[wid] + 1) % ldp]
-            holder = self.workers[holder_wid]
-            key = (wid, target)
-            if key in self._pending_recovery:
-                stream, asm = self._pending_recovery[key]
-                chunks_reused += asm.received
-            else:
-                stream = holder.engine.export_stream(target, which="neighbor")
-                asm = StreamAssembler.for_stream(stream)
-                self._pending_recovery[key] = (stream, asm)
-            chunks_total += stream.n_chunks
-            missing = asm.missing()
-            take = missing
-            if budget is not None:
-                take = missing[:max(budget - chunks_sent, 0)]
-                if len(take) < len(missing):
-                    interrupted = True
-            # wire corruption: the CRC rejects these on delivery and the
-            # NACK path retransmits each one immediately
-            for seq in take[:corrupt_left]:
-                self.transport.corrupt_once(stream.stream_id, seq)
-            corrupt_left -= min(corrupt_left, len(take))
-            if take:
-                tickets.append(self.transport.send(
-                    stream, t0, assembler=asm, seqs=take,
-                    src=holder_wid, dst=wid))
-                chunks_sent += len(take)
-            inflight[wid] = (stream, asm)
-        self.transport.drain()
-
-        if interrupted:
-            # the second failure struck mid-transfer: time (and the link
-            # clock) advance to where the partial transfer stopped, so the
-            # resumed recovery does NOT re-pay this attempt's transfer time
-            finish = max([tk.finish_time for tk in tickets
-                          if tk.finish_time is not None], default=t0)
-            self.sim_time = max(self.sim_time, finish)
-            timeline["network_and_state"] = finish - t0
-            total = sum(timeline.values())
-            return RecoveryReport("interrupted", "neighbor_partial", target,
-                                  0, timeline, total,
-                                  chunks_total=chunks_total,
-                                  chunks_sent=chunks_sent,
-                                  chunks_reused=chunks_reused)
-
-        # ---- every stream landed: rebuild the optimizer vector, slice by
-        # slice of the SNAPSHOT layout (which differs from the live
-        # numbering only across an elastic shrink) ----
-        vec, meta = _flatten_opt(self.state["opt"])
-        slices = shard_slices(len(vec), ldp)
-        for o in range(ldp):
-            owner = new_of.get(o)
-            if owner is not None and owner in inflight:
-                stream, asm = inflight[owner]
-                # NACK retransmission heals CRC rejects in-stream, so
-                # `rejected > 0` is fine as long as assembly completed
-                assert asm.complete, \
-                    f"stream {stream.stream_id} incomplete"
-                vec[slices[o]] = asm.to_flat_dict()["shard"]
-                self._pending_recovery.pop((owner, target), None)
-            else:
-                kind, src_wid = self._slice_source(o, ldp, new_of)
-                keeper = (self.workers[src_wid].engine.own if kind == "own"
-                          else self.workers[src_wid].engine.neighbor)
-                snap = keeper.get(target)
-                assert snap is not None, \
-                    f"version {target} missing for layout slice {o}"
-                vec[slices[o]] = snap.state["shard"]
-        self._layout = None            # live numbering is authoritative again
-        new_opt = _unflatten_opt(vec, meta)
-        params = jax.tree.map(
-            lambda m, p: jnp.asarray(m).astype(p.dtype),
-            new_opt["master"], self.state["params"])
-        self.state = {"step": jnp.asarray(target, jnp.int32),
-                      "params": params, "opt": jax.tree.map(jnp.asarray,
-                                                            new_opt)}
-        self.iteration = target
-
-        # timeline: network recovery overlaps state loading (§5.2); the
-        # state leg is the SCHEDULER's finish time for the recovery chunks,
-        # so TRAIN traffic sharing the link delays recovery emergently
-        n = self.dp
-        t_net = 0.5 + 0.001 * n
-        finish = max([tk.finish_time for tk in tickets if tk.finish_time
-                      is not None], default=t0)
-        self.sim_time = max(self.sim_time, finish)
-        t_state = (finish - t0) + 0.2
-        timeline["network_and_state"] = max(t_net, t_state)
-        total = sum(timeline.values())
-        return RecoveryReport("hardware" if hardware else "software",
-                              "neighbor", target, rolled, timeline, total,
-                              chunks_total=chunks_total,
-                              chunks_sent=chunks_sent,
-                              chunks_reused=chunks_reused)
-
-    def _recover_from_full(self, failed, timeline) -> RecoveryReport:
-        eng0 = self.workers[0].engine
-        eng0.writer.drain()
-        it = eng0.latest_full()
-        assert it is not None, "no full checkpoint available (insurance gap)"
-        like = jax.tree.map(lambda x: np.asarray(x), self.state)
-        restored = eng0.restore_full(it, like)
-
-        # integrity: re-chunk the restored artifact and check it against the
-        # per-chunk CRC manifest written at save time
-        from repro.ckpt.storage import load_manifest, verify_manifest
-        manifest = load_manifest(eng0._full_path(it))
-        chunks_total = 0
-        if manifest is not None:
-            stream = ChunkedStream.from_pytree(
-                manifest["stream_id"], restored,
-                quantum=int(manifest.get("quantum", self.quantum)))
-            blob = b"".join(c.payload for c in stream.chunks)
-            bad = verify_manifest(manifest, blob)
-            assert not bad, f"full ckpt it{it}: corrupt chunks {bad}"
-            chunks_total = stream.n_chunks
-
-        self.state = jax.tree.map(jnp.asarray, restored)
-        rolled = self.iteration - it
-        self.iteration = it
-        full_bytes = sum(np.asarray(l).nbytes
-                         for l in jax.tree.leaves(restored))
-        # serial reload from storage, still through the link model
-        from repro.runtime.failover import schedule_state_phase
-        t_state = 1.0 + schedule_state_phase(full_bytes,
-                                             FailoverCosts().storage_bw,
-                                             quantum=max(full_bytes, 1.0))
-        timeline["network_and_state"] = max(0.5 + 0.001 * self.dp, t_state)
-        total = sum(timeline.values())
-        return RecoveryReport("fallback", "full_ckpt", it, rolled,
-                              timeline, total, chunks_total=chunks_total,
-                              chunks_sent=chunks_total)
 
     # ------------------------------------------------------------------ #
     # Elastic rescale (no spare capacity): shrink DP, repartition data

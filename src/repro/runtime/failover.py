@@ -150,6 +150,73 @@ def fftrainer_timeline(n_workers: int, state_bytes_per_worker: float,
     return tl
 
 
+def compute_recovery_timeline(n_workers: int, state_bytes_per_worker: float,
+                              costs: FailoverCosts = FailoverCosts(),
+                              detection: DetectionTimeline = DetectionTimeline(),
+                              replay: Optional["ReplayCostModel"] = None,
+                              n_replayers: int = 2) -> Dict[str, float]:
+    """Checkpoint-free recovery flow ("All is Not Lost", PAPERS.md): same
+    orchestration legs as FFTrainer, but the state leg is a REPLAY leg —
+    healthy neighbors rebuild the lost worker's state by redundant compute
+    at the modeled recompute rate (train/step.py `ReplayCostModel`). No
+    fabric bytes move, so the leg is independent of link bandwidth, TRAIN
+    contention, and storm damage; the bill lands on `replay_compute`
+    seconds instead (plus `compute_seconds_burned`, the total worker
+    compute spent, reported out-of-timeline)."""
+    from repro.train.step import ReplayCostModel, replay_compute_cost
+    cost = replay_compute_cost(state_bytes_per_worker,
+                               n_replayers=n_replayers,
+                               model=replay or ReplayCostModel())
+    tl = {
+        "detection": max(detection.detection_time(), costs.detection_fft),
+        "pod_creation": costs.pod_creation_fft,
+        "dependency_install": costs.dependency_fft,
+        # network setup overlaps the replay exactly like it overlaps the
+        # stream leg in `fftrainer_timeline` (§5.2)
+        "replay_compute": max(costs.conn_base
+                              + costs.conn_per_worker * n_workers,
+                              cost.wall_seconds),
+    }
+    tl["total"] = sum(tl.values())
+    tl["compute_seconds_burned"] = cost.compute_seconds
+    return tl
+
+
+def hybrid_recovery_timeline(n_workers: int, state_bytes_per_worker: float,
+                             costs: FailoverCosts = FailoverCosts(),
+                             detection: DetectionTimeline = DetectionTimeline(),
+                             replay: Optional["ReplayCostModel"] = None,
+                             n_replayers: int = 2,
+                             train_traffic: TrainTraffic = (),
+                             scheduler: Optional[LinkScheduler] = None,
+                             topology: Optional[LinkTopology] = None,
+                             path: Optional[Sequence[Edge]] = None,
+                             paths: Optional[Sequence[Sequence[Edge]]] = None
+                             ) -> Dict[str, float]:
+    """Per-worker race between the stream leg and the replay leg: the state
+    phase takes whichever finishes first (both start once pods are up).
+    The closed-form analogue of `HybridRecovery` in runtime/recovery.py —
+    useful for the table5 what-if rows without building a cluster."""
+    from repro.train.step import ReplayCostModel, replay_compute_cost
+    t_net = costs.conn_base + costs.conn_per_worker * n_workers
+    t_stream = costs.state_ramp_fft + schedule_state_phase(
+        state_bytes_per_worker, costs.neighbor_bw, quantum=costs.quantum,
+        train_traffic=train_traffic, scheduler=scheduler,
+        topology=topology, path=path, paths=paths)
+    t_replay = replay_compute_cost(state_bytes_per_worker,
+                                   n_replayers=n_replayers,
+                                   model=replay or ReplayCostModel()
+                                   ).wall_seconds
+    tl = {
+        "detection": max(detection.detection_time(), costs.detection_fft),
+        "pod_creation": costs.pod_creation_fft,
+        "dependency_install": costs.dependency_fft,
+        "network_and_state": max(t_net, min(t_stream, t_replay)),
+    }
+    tl["total"] = sum(tl.values())
+    return tl
+
+
 def baseline_timeline(n_workers: int, state_bytes_per_worker: float,
                       costs: FailoverCosts = FailoverCosts(),
                       train_traffic: TrainTraffic = ()

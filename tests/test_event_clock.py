@@ -247,21 +247,25 @@ def test_peek_none_when_nothing_starts_before_horizon():
 # --------------------------------------------------------------------------- #
 # cluster: verdicts without the sub-step loop, booked on real edges
 # --------------------------------------------------------------------------- #
-def _mk_pod_cluster(tmp_path, **kw):
+def _mk_pod_cluster(tmp_path, **fabric_kw):
     import dataclasses
 
     from repro.configs import get_arch, reduce_for_smoke
     from repro.optim import AdamWConfig
-    from repro.runtime.cluster import SimCluster
+    from repro.runtime.cluster import (ClusterConfig, FabricConfig,
+                                       SimCluster)
     cfg = dataclasses.replace(reduce_for_smoke(get_arch("qwen3-0.6b")),
                               dtype="float32")
-    kw.setdefault("quantum", 2048)
-    kw.setdefault("pods", 2)
-    kw.setdefault("dcn_latency", 1e-4)
-    return SimCluster(cfg, dp=4, global_batch=8, seq_len=16,
-                      ckpt_dir=tmp_path / "ck", full_every=50,
-                      hp=AdamWConfig(lr=1e-3, warmup_steps=2, total_steps=50),
-                      seed=0, **kw)
+    fabric_kw.setdefault("quantum", 2048)
+    fabric_kw.setdefault("pods", 2)
+    fabric_kw.setdefault("dcn_latency", 1e-4)
+    return SimCluster(
+        cfg,
+        cluster=ClusterConfig(
+            dp=4, global_batch=8, seq_len=16, ckpt_dir=tmp_path / "ck",
+            full_every=50,
+            hp=AdamWConfig(lr=1e-3, warmup_steps=2, total_steps=50), seed=0),
+        fabric=FabricConfig(**fabric_kw))
 
 
 def test_cluster_verdicts_booked_on_real_fabric_edges(tmp_path):

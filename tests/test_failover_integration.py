@@ -10,16 +10,16 @@ import pytest
 
 from repro.configs import get_arch, reduce_for_smoke
 from repro.optim import AdamWConfig
-from repro.runtime.cluster import SimCluster
+from repro.runtime.cluster import ClusterConfig, FaultScript, SimCluster
 
 
 def _mk(tmp_path, dp=4, full_every=50, arch="qwen3-0.6b", seed=0):
     cfg = reduce_for_smoke(get_arch(arch))
     cfg = dataclasses.replace(cfg, dtype="float32")  # bitwise-stable
-    return SimCluster(cfg, dp=dp, global_batch=8, seq_len=16,
-                      ckpt_dir=tmp_path / "ck", full_every=full_every,
-                      hp=AdamWConfig(lr=1e-3, warmup_steps=2, total_steps=50),
-                      seed=seed)
+    return SimCluster(cfg, cluster=ClusterConfig(
+        dp=dp, global_batch=8, seq_len=16, ckpt_dir=tmp_path / "ck",
+        full_every=full_every,
+        hp=AdamWConfig(lr=1e-3, warmup_steps=2, total_steps=50), seed=seed))
 
 
 def _state_equal(a, b):
@@ -52,7 +52,7 @@ def test_hardware_failure_recovery(tmp_path):
     clu = _mk(tmp_path / "b")
     clu.run(4)
     clu.inject_failure([1], hardware=True)      # host RAM lost too
-    rep = clu.recover(hardware=True)
+    rep = clu.recover(FaultScript(hardware=True))
     assert rep.recovered_from == "neighbor"     # worker 2 held the backup
     clu.run(8 - clu.iteration)
     assert _state_equal(ref.state, clu.state)
@@ -64,7 +64,7 @@ def test_adjacent_failure_falls_back_to_full_ckpt(tmp_path):
     clu = _mk(tmp_path / "c", full_every=3)
     clu.run(7)                                  # full ckpts at it 3 and 6
     clu.inject_failure([1, 2], hardware=True)   # 2 held 1's backup
-    rep = clu.recover(hardware=True)
+    rep = clu.recover(FaultScript(hardware=True))
     assert rep.recovered_from == "full_ckpt"
     assert rep.resume_iteration == 6
     assert rep.rolled_back_iterations == 1      # 7 -> 6

@@ -287,23 +287,27 @@ def test_hierarchical_step_traffic_shapes():
 # --------------------------------------------------------------------------- #
 # cluster-level: pod fabric training + storm recovery
 # --------------------------------------------------------------------------- #
-def _mk_pod_cluster(tmp_path, **kw):
+def _mk_pod_cluster(tmp_path, recovery=None, **fabric_kw):
     import dataclasses
 
     import jax  # noqa: F401  (ensures cpu backend initialized)
     from repro.configs import get_arch, reduce_for_smoke
     from repro.optim import AdamWConfig
-    from repro.runtime.cluster import SimCluster
+    from repro.runtime.cluster import (ClusterConfig, FabricConfig,
+                                       SimCluster)
     cfg = dataclasses.replace(reduce_for_smoke(get_arch("qwen3-0.6b")),
                               dtype="float32")
-    kw.setdefault("quantum", 2048)
-    kw.setdefault("pods", 2)
-    kw.setdefault("dcn_bw", 5e9)
-    kw.setdefault("dcn_latency", 1e-4)
-    return SimCluster(cfg, dp=4, global_batch=8, seq_len=16,
-                      ckpt_dir=tmp_path / "ck", full_every=50,
-                      hp=AdamWConfig(lr=1e-3, warmup_steps=2, total_steps=50),
-                      seed=0, **kw)
+    fabric_kw.setdefault("quantum", 2048)
+    fabric_kw.setdefault("pods", 2)
+    fabric_kw.setdefault("dcn_bw", 5e9)
+    fabric_kw.setdefault("dcn_latency", 1e-4)
+    return SimCluster(
+        cfg,
+        cluster=ClusterConfig(
+            dp=4, global_batch=8, seq_len=16, ckpt_dir=tmp_path / "ck",
+            full_every=50,
+            hp=AdamWConfig(lr=1e-3, warmup_steps=2, total_steps=50), seed=0),
+        fabric=FabricConfig(**fabric_kw), recovery=recovery)
 
 
 def test_cluster_builds_pod_fabric_and_trains(tmp_path):

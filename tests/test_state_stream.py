@@ -12,6 +12,7 @@ from repro.ckpt.engine import CkptEngine, CkptEngineConfig
 from repro.ckpt.stream import (ChunkedStream, StreamAssembler, StreamChunk,
                                StreamTransport, stream_pytree)
 from repro.core.lccl import LinkScheduler
+from repro.runtime.recovery import FaultScript
 
 
 def _tree(seed=0):
@@ -184,18 +185,22 @@ def test_fcr_hiding_breaks_under_train_contention():
 # --------------------------------------------------------------------------- #
 # cluster: multi-failure, resume from partial chunks (real state movement)
 # --------------------------------------------------------------------------- #
-def _mk_cluster(tmp_path, **kw):
+def _mk_cluster(tmp_path, **fabric_kw):
     import jax  # noqa: F401  (ensures cpu backend initialized)
     from repro.configs import get_arch, reduce_for_smoke
     from repro.optim import AdamWConfig
-    from repro.runtime.cluster import SimCluster
+    from repro.runtime.cluster import (ClusterConfig, FabricConfig,
+                                       SimCluster)
     cfg = dataclasses.replace(reduce_for_smoke(get_arch("qwen3-0.6b")),
                               dtype="float32")
-    kw.setdefault("quantum", 2048)
-    return SimCluster(cfg, dp=4, global_batch=8, seq_len=16,
-                      ckpt_dir=tmp_path / "ck", full_every=50,
-                      hp=AdamWConfig(lr=1e-3, warmup_steps=2, total_steps=50),
-                      seed=0, **kw)
+    fabric_kw.setdefault("quantum", 2048)
+    return SimCluster(
+        cfg,
+        cluster=ClusterConfig(
+            dp=4, global_batch=8, seq_len=16, ckpt_dir=tmp_path / "ck",
+            full_every=50,
+            hp=AdamWConfig(lr=1e-3, warmup_steps=2, total_steps=50), seed=0),
+        fabric=FabricConfig(**fabric_kw))
 
 
 def test_multi_failure_resumes_from_partial_chunks(tmp_path):
@@ -206,14 +211,14 @@ def test_multi_failure_resumes_from_partial_chunks(tmp_path):
     clu = _mk_cluster(tmp_path / "b")
     clu.run(5)
     clu.inject_failure([0], hardware=True)
-    r1 = clu.recover(hardware=True, interrupt_after_chunks=3)
+    r1 = clu.recover(FaultScript(hardware=True, interrupt_after_chunks=3))
     assert r1.kind == "interrupted"
     assert r1.chunks_sent == 3 and r1.chunks_total > 3
     assert not clu.workers[0].alive        # still down mid-transfer
 
     # second concurrent failure (non-adjacent: its backup holder is alive)
     clu.inject_failure([2], hardware=True)
-    r2 = clu.recover(hardware=True)
+    r2 = clu.recover(FaultScript(hardware=True))
     assert r2.kind == "hardware"
     assert r2.chunks_reused == 3           # partial chunks NOT re-sent
     assert r2.chunks_sent == r2.chunks_total - 3
@@ -235,7 +240,7 @@ def test_corruption_mid_recovery_heals_via_nack(tmp_path):
     clu = _mk_cluster(tmp_path / "b")
     clu.run(5)
     clu.inject_failure([1], hardware=True)
-    rep = clu.recover(hardware=True, corrupt_chunks=3)
+    rep = clu.recover(FaultScript(hardware=True, corrupt_chunks=3))
     assert rep.kind == "hardware"
     assert rep.rolled_back_iterations == 0     # healed in-stream: no rollback
     assert clu.transport.nacks_sent == 3       # one immediate resend each
@@ -255,13 +260,13 @@ def test_shrink_mid_transfer_keeps_partial_streams(tmp_path):
     at_failure = [np.asarray(x).copy() for x in jax.tree.leaves(clu.state)]
 
     clu.inject_failure([0, 2], hardware=True)  # non-adjacent: backups survive
-    r1 = clu.recover(hardware=True, interrupt_after_chunks=3)
+    r1 = clu.recover(FaultScript(hardware=True, interrupt_after_chunks=3))
     assert r1.kind == "interrupted" and r1.chunks_sent == 3
 
     # no spare capacity for worker 2: shrink it away mid-transfer; worker 0
     # keeps its partial recovery stream across the rescale
     assert clu.shrink([2]) == 3
-    r2 = clu.recover(hardware=True)
+    r2 = clu.recover(FaultScript(hardware=True))
     assert r2.kind == "hardware"
     assert r2.chunks_reused == 3               # partial chunks NOT re-sent
     assert r2.rolled_back_iterations == 0

@@ -9,7 +9,9 @@ the simulated failover state leg can't land silently.
 Gated rows are the state-leg rows of table5 (simulated seconds, fully
 deterministic — a 20% jump is a real model regression, not runner noise):
 any row whose name contains one of the `--match` substrings, default
-``state_leg`` / ``state_recovery`` / ``recovery_total_s``. All other
+``state_leg`` / ``state_recovery`` / ``recovery_total_s`` /
+``replay_compute`` (the last gates the checkpoint-free compute-recovery
+rows the same way). All other
 numeric rows are reported informationally. Non-numeric derived values
 (booleans, labels) are skipped — unless the row is gated, in which case a
 WARNING prints so the gate can't be disabled silently; likewise for a
@@ -30,7 +32,8 @@ import sys
 from pathlib import Path
 from typing import Dict, List, Optional, Sequence, Tuple
 
-DEFAULT_MATCH = ("state_leg", "state_recovery", "recovery_total_s")
+DEFAULT_MATCH = ("state_leg", "state_recovery", "recovery_total_s",
+                 "replay_compute")
 DEFAULT_THRESHOLD = 0.2
 
 

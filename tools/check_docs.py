@@ -10,6 +10,9 @@ Two guarantees, so the docs can't silently rot:
    importable (spec-resolvable) without running it.
 2. Every package under src/repro/ is mentioned in the README module map
    (as `repro/<name>`), so the map stays complete as the codebase grows.
+3. The public API surface (`repro.__all__`) matches the PINNED list below
+   and every pinned name resolves — the export list, the README quickstart
+   and this checker fail together or not at all.
 
 Exit code 0 = clean; nonzero prints every failure.
 """
@@ -21,6 +24,28 @@ import sys
 from pathlib import Path
 
 ROOT = Path(__file__).resolve().parent.parent
+
+# The pinned public API (ISSUE 6): `repro.__all__` must equal this set and
+# every name must resolve. Changing the surface means changing THIS list,
+# the README quickstart, and `src/repro/__init__.py` together.
+PUBLIC_API = (
+    "SimCluster",
+    "ClusterConfig",
+    "FabricConfig",
+    "FaultScript",
+    "RecoveryPolicy",
+    "RecoveryPlan",
+    "RecoveryReport",
+    "RecoveryError",
+    "StreamRecovery",
+    "ComputeRecovery",
+    "HybridRecovery",
+    "fftrainer_timeline",
+    "baseline_timeline",
+    "compute_recovery_timeline",
+    "PodFabric",
+)
+
 FENCE = re.compile(r"```(\w+)?\n(.*?)```", re.DOTALL)
 IMPORT = re.compile(r"^\s*(?:import\s+repro|from\s+repro[\w.]*\s+import)\s",
                     re.MULTILINE)
@@ -36,15 +61,31 @@ def iter_fences(path: Path):
         yield (lang or "").lower(), body
 
 
+def _import_stmts(body: str) -> list[str]:
+    """The repro import statements of one fenced block, including
+    parenthesized multi-line `from repro import (...)` forms."""
+    lines = body.splitlines()
+    stmts, i = [], 0
+    while i < len(lines):
+        if IMPORT.match(lines[i]):
+            stmt = lines[i].strip()
+            while stmt.count("(") > stmt.count(")") and i + 1 < len(lines):
+                i += 1
+                stmt += "\n" + lines[i]
+            stmts.append(stmt)
+        i += 1
+    return stmts
+
+
 def check_python_imports(path: Path, body: str) -> list[str]:
-    """Exec the repro import lines of one fenced python block."""
-    lines = [ln for ln in body.splitlines() if IMPORT.match(ln)]
+    """Exec the repro import statements of one fenced python block."""
     errors = []
-    for ln in lines:
+    for stmt in _import_stmts(body):
         try:
-            exec(ln.strip(), {})
+            exec(stmt, {})
         except Exception as e:  # noqa: BLE001 - report, don't crash
-            errors.append(f"{path.name}: import failed: {ln.strip()!r} "
+            head = stmt.splitlines()[0]
+            errors.append(f"{path.name}: import failed: {head!r} "
                           f"({type(e).__name__}: {e})")
     return errors
 
@@ -77,6 +118,31 @@ def check_module_map() -> list[str]:
     return errors
 
 
+def check_public_api() -> list[str]:
+    """`repro.__all__` equals the pinned PUBLIC_API and every name
+    resolves (the lazy `__getattr__` actually finds it)."""
+    errors = []
+    import repro
+    declared, pinned = set(repro.__all__), set(PUBLIC_API)
+    for name in sorted(pinned - declared):
+        errors.append(f"public API: {name} pinned here but missing from "
+                      "repro.__all__")
+    for name in sorted(declared - pinned):
+        errors.append(f"public API: repro.__all__ exports {name} but it is "
+                      "not pinned in tools/check_docs.py")
+    for name in sorted(declared & pinned):
+        try:
+            getattr(repro, name)
+        except Exception as e:  # noqa: BLE001 - report, don't crash
+            errors.append(f"public API: repro.{name} does not resolve "
+                          f"({type(e).__name__}: {e})")
+    readme = (ROOT / "README.md").read_text()
+    for name in sorted(pinned):
+        if name not in readme:
+            errors.append(f"public API: README.md never mentions {name}")
+    return errors
+
+
 def main() -> int:
     sys.path.insert(0, str(ROOT / "src"))
     sys.path.insert(0, str(ROOT))      # for `python -m benchmarks.*`
@@ -91,11 +157,13 @@ def main() -> int:
             elif lang == "bash":
                 errors.extend(check_bash_modules(path, body))
     errors.extend(check_module_map())
+    errors.extend(check_public_api())
     for e in errors:
         print(f"FAIL: {e}")
     if not errors:
         print(f"docs OK: {len(doc_files())} files checked, "
-              f"module map complete")
+              f"module map complete, public API pinned "
+              f"({len(PUBLIC_API)} names)")
     return 1 if errors else 0
 
 
