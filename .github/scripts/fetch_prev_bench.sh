@@ -1,0 +1,53 @@
+#!/usr/bin/env bash
+# Fetch the previous bench artifact for the trend gate.
+#
+#   fetch_prev_bench.sh <artifact-name-prefix> <output-dir>
+#
+# Walks the latest successful workflow runs on $BASELINE_BRANCH and unzips
+# the newest non-expired artifact whose name starts with the prefix into
+# the output dir. Two outcomes are fine and exit 0 with a note — no
+# successful runs yet, or no matching artifact (first run / expired
+# retention): tools/bench_trend.py then skips with "nothing to gate". Any
+# OTHER failure (API error, bad token, rate limit, download/unzip breakage)
+# emits a ::error annotation and exits 1, so a broken fetch fails the job
+# loudly instead of silently disabling the regression gate.
+#
+# Requires: GH_TOKEN, GITHUB_REPOSITORY, BASELINE_BRANCH in the env.
+set -u
+
+prefix="${1:?usage: fetch_prev_bench.sh <artifact-prefix> <out-dir>}"
+out="${2:?usage: fetch_prev_bench.sh <artifact-prefix> <out-dir>}"
+mkdir -p "$out"
+err="$(mktemp)"
+trap 'rm -f "$err" prev.zip' EXIT
+
+fail() {
+  echo "::error title=bench artifact fetch failed::$1 — $(tr '\n' ' ' <"$err")"
+  exit 1
+}
+
+runs=$(gh api \
+  "repos/${GITHUB_REPOSITORY}/actions/runs?branch=${BASELINE_BRANCH}&status=success&per_page=20" \
+  --jq '.workflow_runs[].id' 2>"$err") \
+  || fail "listing successful runs on ${BASELINE_BRANCH}"
+if [ -z "$runs" ]; then
+  echo "no successful runs on ${BASELINE_BRANCH} yet; skipping trend gate"
+  exit 0
+fi
+
+id=""
+for rid in $runs; do
+  id=$(gh api "repos/${GITHUB_REPOSITORY}/actions/runs/${rid}/artifacts" \
+    --jq "[.artifacts[] | select(.name | startswith(\"${prefix}\"))
+           | select(.expired | not)] | first | .id // empty" 2>"$err") \
+    || fail "listing artifacts of run ${rid}"
+  [ -n "$id" ] && break
+done
+if [ -z "$id" ]; then
+  echo "no previous ${prefix}* artifact on ${BASELINE_BRANCH}; skipping trend gate"
+  exit 0
+fi
+
+gh api "repos/${GITHUB_REPOSITORY}/actions/artifacts/${id}/zip" \
+  >prev.zip 2>"$err" || fail "downloading artifact ${id}"
+unzip -o prev.zip -d "$out" 2>"$err" || fail "unzipping artifact ${id}"

@@ -1,0 +1,194 @@
+"""Fleet-scale fabric benchmark: a 4096-node / 64-pod PodFabric over a
+multi-day seeded failure trace, in single-digit wall-clock seconds.
+
+The steady-state traffic (per-edge TRAIN allreduce + quantum-chunked STATE
+instant shards, every `--period` seconds) is compiled once per topology
+epoch into a `TrafficPlan` (`repro/core/plan.py`) and replayed as numpy
+algebra; each seeded storm crosses on the exact per-event path (degraded
+fabric, live edges only) for `--storm-steps` windows, then the storm is
+repaired and the plan recompiled. Timings on both paths are the event
+clock's own (tests/test_traffic_plan.py property-tests the equivalence).
+
+Rows (`BENCH_fleet_scale.json`, uploaded by the CI `fleet-bench` job):
+`wall_s` is wall-clock and **gated** by `tools/bench_trend.py` (>20%
+slowdown fails); `events` counts the interpreter completions the compiled
+plan batched away plus the exact-path completions actually processed;
+`events_per_wall_s`, `sim_s_per_wall_s`, and `peak_rss_mb` are the
+headline throughput/footprint numbers.
+
+Usage:
+    python -m benchmarks.fleet_scale [--tiny] [--json OUT] [--budget-s S]
+        [--days D] [--seed N]
+
+`--budget-s` makes the benchmark itself the hard wall-clock gate: exit 1
+when the measured wall time exceeds the budget (the CI job's failure mode).
+"""
+from __future__ import annotations
+
+import argparse
+import resource
+import sys
+import time
+from dataclasses import dataclass
+
+import numpy as np
+
+from benchmarks.common import dump_rows, row
+from repro.core.lccl import PodFabric, inject_storm
+from repro.core.plan import compile_traffic_plan, steady_state_pattern
+from repro.train.step import hierarchical_step_traffic
+
+
+@dataclass(frozen=True)
+class FleetSpec:
+    label: str
+    n_pods: int
+    pod_size: int
+    days: float
+    n_storms: int
+    grad_bytes: float = 2e11           # ~50B-param float32 gradient
+    state_bytes: float = float(1 << 30)  # 1 GiB instant shard per worker
+    period: float = 10.0               # modeled seconds per training step
+    storm_steps: int = 2               # exact-path windows per storm
+    ici_bw: float = 50e9
+    dcn_bw: float = 5e9
+    dcn_latency: float = 1e-3
+    quantum: float = float(64 << 20)   # STATE chunk grain on the fleet
+
+    @property
+    def nodes(self) -> int:
+        return self.n_pods * self.pod_size
+
+    @property
+    def n_steps(self) -> int:
+        return int(self.days * 86400 / self.period)
+
+
+FULL = FleetSpec("4096", n_pods=64, pod_size=64, days=3.0, n_storms=10)
+TINY = FleetSpec("tiny", n_pods=4, pod_size=8, days=0.5, n_storms=3)
+
+
+def _submit_pattern(fab: PodFabric, pattern, t: float) -> None:
+    for e, subs in pattern.items():
+        sch = fab.links[e]
+        for kind, size, off in subs:
+            sch.submit(kind, size, t + off)
+
+
+def run_fleet(spec: FleetSpec, seed: int = 0) -> dict:
+    """Simulate `spec.days` of fleet traffic with `spec.n_storms` seeded
+    storms; returns the aggregate stats the rows report."""
+    t_wall0 = time.perf_counter()
+    fab = PodFabric(spec.n_pods, spec.pod_size, ici_bw=spec.ici_bw,
+                    dcn_bw=spec.dcn_bw, dcn_latency=spec.dcn_latency,
+                    quantum=spec.quantum)
+    fab.compile_plan = True            # exact windows skip the global loop
+    profile = hierarchical_step_traffic(spec.grad_bytes, spec.n_pods,
+                                        spec.pod_size,
+                                        state_bytes=spec.state_bytes)
+    rng = np.random.default_rng(seed)
+    lo, hi = 1, max(spec.n_steps - spec.storm_steps - 1, 2)
+    storm_at = sorted(set(int(s) for s in rng.integers(lo, hi,
+                                                       spec.n_storms)))
+    events = 0
+    exact_events = 0
+    recompiles = 0
+    t_sim = 0.0
+    step = 0
+    pattern = steady_state_pattern(fab, profile)
+    plan = compile_traffic_plan(fab, pattern, spec.period)
+
+    def replay(n: int) -> None:
+        nonlocal events, t_sim, step
+        if n <= 0:
+            return
+        rep = plan.apply(n, t0=t_sim)
+        events += rep.events
+        t_sim = rep.t_end
+        step += n
+
+    for s in storm_at:
+        replay(s - step)
+        report = inject_storm(fab, seed=seed * 1009 + s, pods=1,
+                              edge_failures=2)
+        # degraded segment: live edges only, exact event-driven windows
+        storm_pattern = steady_state_pattern(fab, profile)
+        before = sum(sch.n_finished for sch in fab.links.values())
+        for _ in range(spec.storm_steps):
+            _submit_pattern(fab, storm_pattern, t_sim)
+            fab.run(until=t_sim + spec.period)
+            t_sim += spec.period
+            step += 1
+        exact_events += sum(sch.n_finished
+                            for sch in fab.links.values()) - before
+        # repair + recompile: the epoch moved, the old plan is stale
+        for p in report.pods:
+            fab.restore_pod(p)
+        for e in report.edges:
+            fab.restore_edge(*e)
+        assert plan.stale
+        pattern = steady_state_pattern(fab, profile)
+        plan = compile_traffic_plan(fab, pattern, spec.period)
+        recompiles += 1
+    replay(spec.n_steps - step)
+
+    wall = time.perf_counter() - t_wall0
+    rss_kb = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss
+    return {
+        "wall_s": wall,
+        "sim_s": t_sim,
+        "events": events + exact_events,
+        "exact_events": exact_events,
+        "storms": len(storm_at),
+        "recompiles": recompiles,
+        "steps": step,
+        "peak_rss_mb": rss_kb / 1024.0,
+    }
+
+
+def emit_rows(spec: FleetSpec, stats: dict) -> None:
+    pre = f"fleet/{spec.label}"
+    wall = stats["wall_s"]
+    row(f"{pre}/wall_s", wall * 1e6, round(wall, 3))
+    row(f"{pre}/nodes", 0.0, spec.nodes)
+    row(f"{pre}/sim_days", 0.0, round(stats["sim_s"] / 86400.0, 4))
+    row(f"{pre}/steps", 0.0, stats["steps"])
+    row(f"{pre}/storms", 0.0, stats["storms"])
+    row(f"{pre}/events", 0.0, stats["events"])
+    row(f"{pre}/exact_events", 0.0, stats["exact_events"])
+    row(f"{pre}/events_per_wall_s", 0.0,
+        round(stats["events"] / max(wall, 1e-9)))
+    row(f"{pre}/sim_s_per_wall_s", 0.0,
+        round(stats["sim_s"] / max(wall, 1e-9)))
+    row(f"{pre}/peak_rss_mb", 0.0, round(stats["peak_rss_mb"], 1))
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--json", default=None, metavar="OUT",
+                    help="also dump the rows as a JSON artifact")
+    ap.add_argument("--tiny", action="store_true",
+                    help="smoke-scale fleet (CI fleet-bench job)")
+    ap.add_argument("--budget-s", type=float, default=None, metavar="S",
+                    help="hard wall-clock budget: exit 1 when exceeded")
+    ap.add_argument("--days", type=float, default=None,
+                    help="override the simulated trace length")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="failure-trace seed")
+    args = ap.parse_args(argv)
+    spec = TINY if args.tiny else FULL
+    if args.days is not None:
+        spec = FleetSpec(**{**spec.__dict__, "days": args.days})
+    stats = run_fleet(spec, seed=args.seed)
+    emit_rows(spec, stats)
+    if args.json:
+        print(f"wrote {dump_rows(args.json)}")
+    if args.budget_s is not None and stats["wall_s"] > args.budget_s:
+        print(f"fleet_scale: FAIL — wall {stats['wall_s']:.2f}s exceeds "
+              f"the {args.budget_s:.0f}s budget", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

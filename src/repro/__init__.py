@@ -8,6 +8,7 @@ implementation detail and may move between releases:
     from repro import HybridRecovery, RecoveryError
     from repro import fftrainer_timeline, baseline_timeline
     from repro import compute_recovery_timeline, PodFabric
+    from repro import TrafficPlan, compile_traffic_plan
 
 The list is pinned by `tools/check_docs.py` (CI `docs` job), so it cannot
 drift from the README/docs. Imports are lazy: touching `repro.SimCluster`
@@ -31,6 +32,8 @@ __all__ = [
     "baseline_timeline",
     "compute_recovery_timeline",
     "PodFabric",
+    "TrafficPlan",
+    "compile_traffic_plan",
 ]
 
 _EXPORTS = {
@@ -49,6 +52,8 @@ _EXPORTS = {
     "baseline_timeline": "repro.runtime.failover",
     "compute_recovery_timeline": "repro.runtime.failover",
     "PodFabric": "repro.core.lccl",
+    "TrafficPlan": "repro.core.plan",
+    "compile_traffic_plan": "repro.core.plan",
 }
 
 

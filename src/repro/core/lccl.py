@@ -453,6 +453,15 @@ class LinkTopology:
             for e in sorted(edges)}
         self.dark_nodes: set = set()
         self.dark_edges: set = set()
+        # plan compilation (core/plan.py): `compile_plan` switches `run` to
+        # the decoupled fast path (exact, skips the global peek/min event
+        # loop for edges no pending multi-hop item couples); `_epoch` counts
+        # topology-changing events (dark nodes/edges, bandwidth edits) so
+        # compiled traffic plans and the BFS routing cache know when their
+        # precomputed state went stale
+        self.compile_plan = False
+        self._epoch = 0
+        self._path_cache: Dict[Tuple[int, int], Tuple[Edge, ...]] = {}
         # in-flight multi-hop items, keyed by the identity of the Transfer
         # currently carrying them: the event loop in `run` knows exactly
         # which transfer just finished, so forwarding is an O(1) dict pop
@@ -480,6 +489,7 @@ class LinkTopology:
 
     def set_bandwidth(self, u: int, v: int, bandwidth: float) -> None:
         self.links[edge_key(u, v)].bw = bandwidth
+        self._bump_epoch()
 
     def edge_up(self, u: int, v: int) -> bool:
         e = edge_key(u, v)
@@ -499,17 +509,33 @@ class LinkTopology:
         return sorted(out)
 
     # ------------------------- failure state ------------------------- #
+    @property
+    def epoch(self) -> int:
+        """Monotone topology-change counter: bumped whenever dark state or
+        bandwidth changes. A compiled `TrafficPlan` (core/plan.py) snapshots
+        it at compile time and refuses to replay once it diverges; the BFS
+        routing cache is dropped on every bump."""
+        return self._epoch
+
+    def _bump_epoch(self) -> None:
+        self._epoch += 1
+        self._path_cache.clear()
+
     def fail_node(self, wid: int) -> None:
         self.dark_nodes.add(wid)
+        self._bump_epoch()
 
     def restore_node(self, wid: int) -> None:
         self.dark_nodes.discard(wid)
+        self._bump_epoch()
 
     def fail_edge(self, u: int, v: int) -> None:
         self.dark_edges.add(edge_key(u, v))
+        self._bump_epoch()
 
     def restore_edge(self, u: int, v: int) -> None:
         self.dark_edges.discard(edge_key(u, v))
+        self._bump_epoch()
 
     # ------------------------- routing ------------------------- #
     def path(self, src: int, dst: int,
@@ -518,13 +544,24 @@ class LinkTopology:
         endpoints are assumed up (a recovering node's pod is created before
         its state streams); intermediate dark nodes/edges are routed around.
         `blocked` adds extra edges to avoid (used for edge-disjoint
-        alternate paths)."""
+        alternate paths).
+
+        Unblocked lookups hit a routing cache keyed (src, dst) that lives
+        until the next topology change (`_bump_epoch` clears it), so the
+        per-step routes of a steady fabric cost one BFS per epoch instead
+        of one per submission."""
+        if not blocked:
+            hit = self._path_cache.get((src, dst))
+            if hit is not None:
+                return list(hit)
         p = self._bfs(src, dst, blocked or set())
         if p is None:
             raise RuntimeError(
                 f"no live path {src} -> {dst} "
                 f"(dark nodes {sorted(self.dark_nodes)}, "
                 f"dark edges {sorted(self.dark_edges)})")
+        if not blocked:
+            self._path_cache[(src, dst)] = tuple(p)
         return p
 
     def _bfs(self, src: int, dst: int, blocked: set
@@ -737,16 +774,60 @@ class LinkTopology:
         multi-hop stream crosses as many hops inside one window as its
         exact store-and-forward schedule allows, and windowed timings equal
         drained timings. Finally each edge coasts to `until` (residual
-        STATE quanta, clock advance). Returns total link-busy seconds."""
+        STATE quanta, clock advance). Returns total link-busy seconds.
+
+        With `compile_plan` set (FabricConfig(compile_plan=True)) the same
+        window runs on the decoupled fast path: only the edges a pending
+        multi-hop item still couples go through the global event loop;
+        every other edge advances independently in one `LinkScheduler.run`
+        call. Cross-edge ordering matters solely for forwarding decisions,
+        so the timings are identical (property-tested in
+        tests/test_traffic_plan.py) while the O(edges^2) peek/min scan
+        drops to O(coupled edges^2 + edges)."""
+        if self.compile_plan:
+            return self._run_decoupled(until)
+        busy = self._run_events(until)
+        self._pump()
+        return busy
+
+    def _run_decoupled(self, until: float) -> float:
+        """Exact window advance without the global event loop: edges in the
+        remaining path of some in-flight multi-hop item must still advance
+        in cross-edge event order (their completions forward submissions),
+        but that closure is usually tiny; the rest of the fabric advances
+        edge-by-edge, independently."""
+        coupled: set = set()
+        for pt in self._inflight.values():
+            if pt.hop < len(pt.path) - 1:
+                coupled.update(pt.path[pt.hop:])
+        busy = 0.0
+        if coupled:
+            busy += self._run_events(until, coupled)
+        for e, sch in self.links.items():
+            if e not in coupled:
+                busy += sch.run(until)
+        self._pump()
+        return busy
+
+    def _run_events(self, until: float,
+                    edges: Optional[set] = None) -> float:
+        """The cross-edge event loop over `edges` (default: every edge):
+        process completions globally earliest-first, forwarding each
+        finished hop at its true arrival instant, then coast each edge to
+        `until`. Forwarded submissions always land inside `edges` — the
+        caller passes a closure over the remaining hops of every pending
+        multi-hop item (or all edges)."""
+        links = self.links if edges is None else \
+            {e: self.links[e] for e in edges}
         busy = 0.0
         peek: Dict[Edge, Optional[float]] = {
-            e: sch.peek_next_finish(until) for e, sch in self.links.items()}
+            e: sch.peek_next_finish(until) for e, sch in links.items()}
         while True:
             nxt = [(t, e) for e, t in peek.items() if t is not None]
             if not nxt:
                 break
             _, e = min(nxt)
-            sch = self.links[e]
+            sch = links[e]
             before = sch.n_finished
             busy += sch.run(until, stop_after_finish=True)
             if sch.n_finished == before:   # peek promised a completion
@@ -758,10 +839,9 @@ class LinkTopology:
             if pt is not None:
                 f = self._advance(pt)
                 if f is not None:          # new submission: refresh its peek
-                    peek[f] = self.links[f].peek_next_finish(until)
-        for sch in self.links.values():
+                    peek[f] = links[f].peek_next_finish(until)
+        for sch in links.values():
             busy += sch.run(until)
-        self._pump()
         return busy
 
     def drain(self) -> float:

@@ -80,7 +80,12 @@ class ClusterConfig:
 
 @dataclass(frozen=True)
 class FabricConfig:
-    """Fabric knobs of a simulated cluster (what the bytes ride)."""
+    """Fabric knobs of a simulated cluster (what the bytes ride).
+
+    `compile_plan=True` switches `LinkTopology.run` onto the decoupled fast
+    path (exact timings, but only edges coupled by a pending multi-hop item
+    pay the global event loop — see `repro/core/plan.py`) and keeps the BFS
+    routing tables epoch-cached across steps."""
     link_bw: float = 50e9
     quantum: int = DEFAULT_QUANTUM
     topology: str = "ring"
@@ -89,6 +94,7 @@ class FabricConfig:
     dcn_bw: float = 5e9
     ici_latency: float = 0.0
     dcn_latency: float = 0.0
+    compile_plan: bool = False
 
 
 _CLUSTER_FIELDS = {f.name for f in dataclasses.fields(ClusterConfig)}
@@ -252,21 +258,26 @@ class SimCluster:
         joined by a DCN gateway ring. The constructor rejects a
         non-dividing pod count; an elastic shrink that breaks divisibility
         degrades to a flat ring with a warning."""
+        topo: Optional[LinkTopology] = None
         if self.pods > 1:
             if dp % self.pods == 0 and dp // self.pods >= 1:
-                return PodFabric(self.pods, dp // self.pods, self.link_bw,
+                topo = PodFabric(self.pods, dp // self.pods, self.link_bw,
                                  self.dcn_bw, quantum=self.quantum,
                                  ici_latency=self.ici_latency,
                                  dcn_latency=self.dcn_latency,
                                  edge_bw=edge_bw)
-            import warnings
-            warnings.warn(
-                f"dp={dp} no longer divides into pods={self.pods} after "
-                f"rescale; the fabric degrades to a flat ring",
-                RuntimeWarning, stacklevel=2)
-        return LinkTopology(dp, self.link_bw, quantum=self.quantum,
-                            kind=self.topology_kind, edge_bw=edge_bw,
-                            latency=self.ici_latency)
+            else:
+                import warnings
+                warnings.warn(
+                    f"dp={dp} no longer divides into pods={self.pods} after "
+                    f"rescale; the fabric degrades to a flat ring",
+                    RuntimeWarning, stacklevel=2)
+        if topo is None:
+            topo = LinkTopology(dp, self.link_bw, quantum=self.quantum,
+                                kind=self.topology_kind, edge_bw=edge_bw,
+                                latency=self.ici_latency)
+        topo.compile_plan = self.fabric_config.compile_plan
+        return topo
 
     # ------------------------------------------------------------------ #
     def _make_step(self):

@@ -92,6 +92,35 @@ def test_gated_row_turned_non_numeric_warns(tmp_path):
     assert "WARNING gated row non-numeric" in r.stdout
 
 
+def test_fleet_wall_clock_regression_fails(tmp_path):
+    """The fleet-bench job's wall-clock rows are gated: the compiled-plan
+    fast path slowing down >20% on the same runner class must fail CI."""
+    prev = _dump(tmp_path / "p.json",
+                 [("fleet/tiny/wall_s", "1.0"),
+                  ("fleet/tiny/events_per_wall_s", "3.2e8")])
+    cur = _dump(tmp_path / "c.json",
+                [("fleet/tiny/wall_s", "1.5"),
+                 ("fleet/tiny/events_per_wall_s", "2.0e8")])
+    r = _run(cur, prev)
+    assert r.returncode == 1, r.stdout + r.stderr
+    assert "fleet/tiny/wall_s" in r.stdout
+    assert "REGRESSION" in r.stdout
+
+
+def test_fleet_wall_clock_within_threshold_passes(tmp_path):
+    """Throughput rows (events_per_wall_s) are informational — only the
+    wall_s rows gate, and +15% wall is inside the 20% noise budget."""
+    prev = _dump(tmp_path / "p.json",
+                 [("fleet/4096/wall_s", "5.5"),
+                  ("fleet/4096/events_per_wall_s", "3.2e8")])
+    cur = _dump(tmp_path / "c.json",
+                [("fleet/4096/wall_s", "6.3"),
+                 ("fleet/4096/events_per_wall_s", "1.0e8")])
+    r = _run(cur, prev)
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "OK" in r.stdout
+
+
 def test_custom_threshold_and_match(tmp_path):
     prev = _dump(tmp_path / "p.json", [("x/custom_row", "1.0")])
     cur = _dump(tmp_path / "c.json", [("x/custom_row", "1.4")])

@@ -1,0 +1,299 @@
+"""Compiled traffic plans (ISSUE 7 tentpole): plan-compiled timings equal
+the exact event-driven clock to float precision on ring / pod-fabric /
+storm / bidirectional scenarios (same rtol=1e-12 discipline as
+tests/test_event_clock.py — hypothesis-randomized workloads live in
+test_traffic_plan_property.py); the `compile_plan` decoupled run path
+matches the global event loop on multi-hop traffic; and plans + routing
+caches invalidate on topology epochs (failures, storms, restores,
+bandwidth edits)."""
+from types import SimpleNamespace
+
+import numpy as np
+import pytest
+
+from repro.core.lccl import (LinkTopology, PodFabric, inject_storm,
+                             submit_chunked_path)
+from repro.core.plan import (PlanUnsupported, compile_traffic_plan,
+                             steady_state_pattern)
+
+PERIOD = 0.25
+
+
+def _profile(train=4e4, state=2.5e4, dcn=1e4):
+    """Duck-typed TrafficProfile: drains well inside PERIOD on the 1e6 B/s
+    test fabrics (0.065s ICI, 0.05s DCN)."""
+    return SimpleNamespace(train_bytes=train, state_bytes=state,
+                           dcn_bytes=dcn)
+
+
+def _ring():
+    return LinkTopology(8, 1e6, quantum=1e4)
+
+
+def _pods():
+    return PodFabric(4, 4, ici_bw=1e6, dcn_bw=2e5, dcn_latency=1e-3,
+                     quantum=1e4)
+
+
+def _storm_fabric():
+    fab = _pods()
+    inject_storm(fab, seed=123, pods=1, edge_failures=1)
+    return fab
+
+
+def _steady(fab):
+    return steady_state_pattern(fab, _profile())
+
+
+def _bidi(fab):
+    """Bidirectional split: each ring edge carries the two half-shards a
+    worker splits across both ring directions (same-instant ragged STATE
+    plus a later offset batch) on top of TRAIN."""
+    half = 1.25e4
+    return {e: (("TRAIN", 4e4, 0.0), ("STATE", half, 0.0),
+                ("STATE", half, 0.3 * PERIOD))
+            for e in fab.live_edges()}
+
+
+_SCENARIOS = {
+    "ring": (_ring, _steady),
+    "pod_fabric": (_pods, _steady),
+    "storm": (_storm_fabric, _steady),
+    "bidirectional": (_ring, _bidi),
+}
+
+
+def _interpret(factory, pattern, n):
+    """Reference: drive a fresh identical fabric through `n` periods on the
+    exact event-driven clock, one window per period."""
+    fab = factory()
+    for s in range(n):
+        for e, subs in pattern.items():
+            for kind, size, off in subs:
+                fab.links[e].submit(kind, size, s * PERIOD + off)
+        fab.run(until=(s + 1) * PERIOD)
+    fab.drain()
+    return fab
+
+
+# --------------------------------------------------------------------------- #
+# compiled == drained (the acceptance criterion)
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("scenario", sorted(_SCENARIOS))
+def test_compiled_plan_matches_drain(scenario):
+    factory, pat_fn = _SCENARIOS[scenario]
+    fab = factory()
+    pattern = pat_fn(fab)
+    plan = compile_traffic_plan(fab, pattern, PERIOD)
+    n = 6
+    ref = _interpret(factory, pattern, n)
+    for e in pattern:
+        got = np.sort(plan.finish_times(*e, n))
+        want = np.sort([tr.t_finish for tr in ref.links[e].done])
+        assert len(got) == len(want), e
+        np.testing.assert_allclose(got, want, rtol=1e-12)
+
+
+@pytest.mark.parametrize("scenario", sorted(_SCENARIOS))
+def test_apply_advances_schedulers_like_the_interpreter(scenario):
+    """`apply` leaves every planned edge exactly where the per-event loop
+    would: clock at the window horizon, completion counters advanced."""
+    factory, pat_fn = _SCENARIOS[scenario]
+    fab = factory()
+    pattern = pat_fn(fab)
+    plan = compile_traffic_plan(fab, pattern, PERIOD)
+    n = 5
+    rep = plan.apply(n)
+    ref = _interpret(factory, pattern, n)
+    assert rep.events == sum(len(ref.links[e].done) for e in pattern)
+    for e in pattern:
+        assert fab.links[e].now == pytest.approx(n * PERIOD, rel=1e-12)
+        assert fab.links[e].n_finished == ref.links[e].n_finished
+        assert fab.links[e].idle
+
+
+# --------------------------------------------------------------------------- #
+# the decoupled compile_plan run path == the global event loop
+# --------------------------------------------------------------------------- #
+def _multihop_finishes(make, src_dst, nbytes, compile_plan, windowed):
+    topo = make()
+    topo.compile_plan = compile_plan
+    src, dst = src_dst if src_dst is not None else _storm_endpoints(topo)
+    pts = submit_chunked_path(topo, "STATE", nbytes, 0.0,
+                              topo.path(src, dst), quantum=1e4)
+    if windowed:
+        t = 0.0
+        while not all(pt.finished for pt in pts) and t < 10.0:
+            t += 0.05
+            topo.run(until=t)
+    else:
+        topo.drain()
+    assert all(pt.finished for pt in pts)
+    return [pt.t_finish for pt in pts]
+
+
+def _storm_endpoints(fab):
+    dark = fab.dark_pods()[0]
+    return (fab.gateway((dark + 1) % fab.n_pods),
+            fab.gateway((dark - 1) % fab.n_pods))
+
+
+_MULTIHOP = {
+    "ring_multihop": (_ring, (0, 3), 1e5),
+    "pod_crosspod": (_pods, (5, 2), 1e5),
+    "storm_darkened_detour": (_storm_fabric, None, 1e5),
+}
+
+
+@pytest.mark.parametrize("windowed", [False, True])
+@pytest.mark.parametrize("scenario", sorted(_MULTIHOP))
+def test_decoupled_run_matches_event_loop_on_multihop(scenario, windowed):
+    """With compile_plan set, `run` skips the global peek/min loop for
+    uncoupled edges but must reproduce the exact event-ordered schedule of
+    multi-hop items, windowed and drained alike."""
+    make, ends, nbytes = _MULTIHOP[scenario]
+    fast = _multihop_finishes(make, ends, nbytes, True, windowed)
+    exact = _multihop_finishes(make, ends, nbytes, False, False)
+    np.testing.assert_allclose(fast, exact, rtol=1e-12)
+
+
+def test_decoupled_run_matches_bidirectional_transport_split():
+    """The TopologyTransport bidirectional split (two ring directions
+    pipelining independently) is identical under the decoupled path."""
+    from repro.ckpt.stream import (ChunkedStream, StreamAssembler,
+                                   TopologyTransport)
+
+    def finish(compile_plan):
+        topo = _ring()
+        topo.compile_plan = compile_plan
+        tp = TopologyTransport(topo)
+        arr = np.zeros((1 << 20) // 8, dtype=np.float64)
+        cs = ChunkedStream.from_array("r", arr, quantum=1 << 12)
+        asm = StreamAssembler.for_stream(cs)
+        ticket = tp.send(cs, 0.0, assembler=asm, src=0, dst=1,
+                         policy="split")
+        t = 0.0
+        while not ticket.complete and t < 60.0:
+            t += 0.25
+            tp.run(until=t)
+        assert asm.complete
+        return ticket.finish_time
+
+    assert finish(True) == pytest.approx(finish(False), rel=1e-12)
+
+
+# --------------------------------------------------------------------------- #
+# cache invalidation: epochs, routing tables, stale plans
+# --------------------------------------------------------------------------- #
+def test_path_cache_invalidates_on_topology_change():
+    topo = LinkTopology(5, 1e6, quantum=1e4)
+    e0 = topo.epoch
+    direct = topo.path(0, 2)
+    assert direct == [(0, 1), (1, 2)]
+    assert topo.path(0, 2) == direct          # cache hit, same route
+    topo.fail_node(1)
+    assert topo.epoch > e0
+    detour = topo.path(0, 2)
+    assert detour == [(0, 4), (3, 4), (2, 3)]
+    topo.restore_node(1)
+    assert topo.path(0, 2) == direct          # re-cached after restore
+
+
+def test_blocked_lookups_bypass_the_cache():
+    topo = LinkTopology(5, 1e6, quantum=1e4)
+    assert topo.path(0, 2) == [(0, 1), (1, 2)]
+    alt = topo.path(0, 2, blocked={(0, 1)})
+    assert alt == [(0, 4), (3, 4), (2, 3)]
+    assert topo.path(0, 2) == [(0, 1), (1, 2)]
+
+
+def test_stale_plan_refuses_to_replay():
+    fab = _pods()
+    plan = compile_traffic_plan(fab, _steady(fab), PERIOD)
+    assert not plan.stale
+    dark = next(iter(fab.live_edges()))
+    fab.fail_edge(*dark)
+    assert plan.stale
+    with pytest.raises(PlanUnsupported, match="stale"):
+        plan.apply(1)
+    # restoring is ALSO a topology change: the epoch is monotone, so a plan
+    # from before the failure stays stale and must be recompiled
+    fab.restore_edge(*dark)
+    assert plan.stale
+    fresh = compile_traffic_plan(fab, _steady(fab), PERIOD)
+    assert not fresh.stale
+    fresh.apply(2)
+
+
+def test_bandwidth_edit_invalidates_the_plan():
+    fab = _ring()
+    plan = compile_traffic_plan(fab, _steady(fab), PERIOD)
+    fab.set_bandwidth(0, 1, 5e5)
+    assert plan.stale
+
+
+def test_overcommitted_period_is_unsupported():
+    fab = _ring()
+    pattern = {e: (("TRAIN", 2 * 1e6 * PERIOD, 0.0),)
+               for e in fab.live_edges()}
+    with pytest.raises(PlanUnsupported, match="overcommitted"):
+        compile_traffic_plan(fab, pattern, PERIOD)
+
+
+def test_dark_edge_in_pattern_is_unsupported():
+    fab = _ring()
+    pattern = _steady(fab)
+    fab.fail_edge(0, 1)
+    with pytest.raises(PlanUnsupported, match="dark"):
+        compile_traffic_plan(fab, pattern, PERIOD)
+
+
+def test_apply_requires_a_steady_state_boundary():
+    fab = _ring()
+    plan = compile_traffic_plan(fab, _steady(fab), PERIOD)
+    fab.links[(0, 1)].submit("STATE", 5e4, 0.0)   # mid-flight leftover
+    with pytest.raises(PlanUnsupported, match="boundary"):
+        plan.apply(1)
+
+
+# --------------------------------------------------------------------------- #
+# cluster wiring: FabricConfig(compile_plan=True) changes nothing but speed
+# --------------------------------------------------------------------------- #
+def _mk_pod_cluster(tmp_path, **fabric_kw):
+    import dataclasses
+
+    from repro.configs import get_arch, reduce_for_smoke
+    from repro.optim import AdamWConfig
+    from repro.runtime.cluster import (ClusterConfig, FabricConfig,
+                                       SimCluster)
+    cfg = dataclasses.replace(reduce_for_smoke(get_arch("qwen3-0.6b")),
+                              dtype="float32")
+    fabric_kw.setdefault("quantum", 2048)
+    fabric_kw.setdefault("pods", 2)
+    fabric_kw.setdefault("dcn_latency", 1e-4)
+    return SimCluster(
+        cfg,
+        cluster=ClusterConfig(
+            dp=4, global_batch=8, seq_len=16, ckpt_dir=tmp_path / "ck",
+            full_every=50,
+            hp=AdamWConfig(lr=1e-3, warmup_steps=2, total_steps=50), seed=0),
+        fabric=FabricConfig(**fabric_kw))
+
+
+def test_cluster_compile_plan_is_bit_identical(tmp_path):
+    """A SimCluster on the compiled fast path trains, books hidden/exposed
+    verdicts, and times its fabric identically to the exact path."""
+    fast = _mk_pod_cluster(tmp_path / "fast", compile_plan=True)
+    assert fast.topology.compile_plan
+    exact = _mk_pod_cluster(tmp_path / "exact")
+    assert not exact.topology.compile_plan
+    lf = fast.run(3)
+    le = exact.run(3)
+    assert lf == le                               # bitwise-identical training
+    assert fast.instant_hidden == exact.instant_hidden
+    assert fast.instant_exposed == exact.instant_exposed
+    assert fast.edge_instant_hidden == exact.edge_instant_hidden
+    assert fast.edge_instant_exposed == exact.edge_instant_exposed
+    for wf, we in zip(fast.workers, exact.workers):
+        tf, te = wf.engine.last_instant_ticket, we.engine.last_instant_ticket
+        assert tf.finish_time == pytest.approx(te.finish_time, rel=1e-12)

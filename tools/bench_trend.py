@@ -7,11 +7,14 @@ a gated row regressed by more than the threshold — so a change that slows
 the simulated failover state leg can't land silently.
 
 Gated rows are the state-leg rows of table5 (simulated seconds, fully
-deterministic — a 20% jump is a real model regression, not runner noise):
-any row whose name contains one of the `--match` substrings, default
-``state_leg`` / ``state_recovery`` / ``recovery_total_s`` /
-``replay_compute`` (the last gates the checkpoint-free compute-recovery
-rows the same way). All other
+deterministic — a 20% jump is a real model regression, not runner noise)
+plus the WALL-CLOCK rows of the fleet-scale benchmark: any row whose name
+contains one of the `--match` substrings, default ``state_leg`` /
+``state_recovery`` / ``recovery_total_s`` / ``replay_compute`` (the last
+gates the checkpoint-free compute-recovery rows the same way) /
+``wall_s`` (the fleet-bench job's `fleet/*/wall_s` rows — a >20% wall
+slowdown on the same runner class means the compiled-plan fast path
+regressed, which is exactly what that job exists to catch). All other
 numeric rows are reported informationally. Non-numeric derived values
 (booleans, labels) are skipped — unless the row is gated, in which case a
 WARNING prints so the gate can't be disabled silently; likewise for a
@@ -33,7 +36,7 @@ from pathlib import Path
 from typing import Dict, List, Optional, Sequence, Tuple
 
 DEFAULT_MATCH = ("state_leg", "state_recovery", "recovery_total_s",
-                 "replay_compute")
+                 "replay_compute", "wall_s")
 DEFAULT_THRESHOLD = 0.2
 
 

@@ -24,7 +24,7 @@ PRAGMA = "deprecated-ok"
 LEGACY_CLUSTER_KWARGS = {
     "dp", "global_batch", "seq_len", "dataset_size", "hp", "ckpt_dir",
     "full_every", "seed", "link_bw", "quantum", "t_iter_model", "topology",
-    "edge_bw", "pods", "dcn_bw", "ici_latency", "dcn_latency",
+    "edge_bw", "pods", "dcn_bw", "ici_latency", "dcn_latency", "compile_plan",
 }
 LEGACY_RECOVER_KWARGS = {"hardware", "interrupt_after_chunks",
                          "corrupt_chunks"}

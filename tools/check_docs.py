@@ -44,6 +44,8 @@ PUBLIC_API = (
     "baseline_timeline",
     "compute_recovery_timeline",
     "PodFabric",
+    "TrafficPlan",
+    "compile_traffic_plan",
 )
 
 FENCE = re.compile(r"```(\w+)?\n(.*?)```", re.DOTALL)

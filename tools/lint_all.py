@@ -1,0 +1,60 @@
+"""Run every repo lint with one command.
+
+Wraps the checks the ci `docs` job runs — docs snippets / module map /
+public-API pin (`tools/check_docs.py`) and the internal legacy-kwarg ban
+(`tools/check_deprecations.py`) — each in its own interpreter with
+PYTHONPATH=src set for you, prints a PASS/FAIL summary, and exits with the
+worst status. Use it locally before pushing instead of remembering the
+individual tools:
+
+    python tools/lint_all.py            # all lints
+    python tools/lint_all.py --list     # show what would run
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import subprocess
+import sys
+from pathlib import Path
+from typing import Optional, Sequence, Tuple
+
+REPO = Path(__file__).resolve().parents[1]
+
+# (label, argv relative to the repo root) — append new repo lints here and
+# the ci docs job picks them up automatically
+LINTS: Tuple[Tuple[str, Tuple[str, ...]], ...] = (
+    ("check_docs", ("tools/check_docs.py",)),
+    ("check_deprecations", ("tools/check_deprecations.py",)),
+)
+
+
+def run_all() -> int:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO / "src")
+    worst = 0
+    results = []
+    for label, argv in LINTS:
+        proc = subprocess.run([sys.executable, *argv], cwd=REPO, env=env)
+        results.append((label, proc.returncode))
+        worst = max(worst, proc.returncode)
+    print("\nlint_all summary:")
+    for label, rc in results:
+        print(f"  {'PASS' if rc == 0 else f'FAIL (exit {rc})'}  {label}")
+    return worst
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--list", action="store_true",
+                    help="list the lints without running them")
+    args = ap.parse_args(argv)
+    if args.list:
+        for label, lint_argv in LINTS:
+            print(f"{label}: {' '.join(lint_argv)}")
+        return 0
+    return run_all()
+
+
+if __name__ == "__main__":
+    sys.exit(main())
