@@ -9,6 +9,7 @@ implementation detail and may move between releases:
     from repro import fftrainer_timeline, baseline_timeline
     from repro import compute_recovery_timeline, PodFabric
     from repro import TrafficPlan, compile_traffic_plan
+    from repro import ReliabilityConfig, Scenario, run_scenario
 
 The list is pinned by `tools/check_docs.py` (CI `docs` job), so it cannot
 drift from the README/docs. Imports are lazy: touching `repro.SimCluster`
@@ -34,6 +35,9 @@ __all__ = [
     "PodFabric",
     "TrafficPlan",
     "compile_traffic_plan",
+    "ReliabilityConfig",
+    "Scenario",
+    "run_scenario",
 ]
 
 _EXPORTS = {
@@ -54,6 +58,9 @@ _EXPORTS = {
     "PodFabric": "repro.core.lccl",
     "TrafficPlan": "repro.core.plan",
     "compile_traffic_plan": "repro.core.plan",
+    "ReliabilityConfig": "repro.runtime.reliability",
+    "Scenario": "repro.runtime.scenarios",
+    "run_scenario": "repro.runtime.scenarios",
 }
 
 

@@ -175,6 +175,12 @@ class LinkScheduler:
         self.now = 0.0
         self.done: List[Transfer] = []
         self.n_finished = 0            # survives done-list pruning
+        # observed-throughput accounting (gray-failure detection): delivered
+        # TRAIN payload and the transmit seconds it actually took at the
+        # CURRENT bw — a silently degraded link shows up as delivered bytes
+        # per transmit second falling below the provisioned rate
+        self.train_bytes_done = 0.0
+        self.train_tx_seconds = 0.0
         self._train: List[Transfer] = []
         self._state: List[Transfer] = []
         self._rem: Optional[Transfer] = None   # STATE mid-flight across runs
@@ -200,6 +206,9 @@ class LinkScheduler:
         tr.finished = True
         self.done.append(tr)
         self.n_finished += 1
+        if tr.kind == "TRAIN":
+            self.train_bytes_done += tr.size
+            self.train_tx_seconds += tr.size / self.bw
 
     @property
     def idle(self) -> bool:

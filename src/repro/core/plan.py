@@ -73,6 +73,8 @@ class PlanClass:
     rel_clock: float                   # scheduler clock at period drain
     busy: float                        # link-busy seconds per period
     kinds: Tuple[str, ...]             # completion kinds, template order
+    train_bytes: float = 0.0           # TRAIN payload per period
+    train_tx: float = 0.0              # TRAIN transmit seconds per period
 
 
 @dataclass(frozen=True)
@@ -161,6 +163,8 @@ class TrafficPlan:
                 sch = links[e]
                 sch.now = t_end
                 sch.n_finished += n_steps * k
+                sch.train_bytes_done += n_steps * c.train_bytes
+                sch.train_tx_seconds += n_steps * c.train_tx
             busy += n_steps * c.busy * len(c.edges)
             events += n_steps * k * len(c.edges)
         return PlanReplay(n_steps, events, busy, t_end)
@@ -211,7 +215,9 @@ def compile_traffic_plan(topology: LinkTopology,
             edges=tuple(sorted(edges)),
             rel_finish=np.array([tr.t_finish for tr in ref.done]),
             rel_clock=ref.now, busy=busy,
-            kinds=tuple(tr.kind for tr in ref.done)))
+            kinds=tuple(tr.kind for tr in ref.done),
+            train_bytes=ref.train_bytes_done,
+            train_tx=ref.train_tx_seconds))
     return TrafficPlan(topology, period, classes)
 
 

@@ -18,7 +18,6 @@ Failure semantics (paper §6.2, Table 3):
 from __future__ import annotations
 
 import dataclasses
-import time
 import warnings
 from dataclasses import dataclass, field
 from pathlib import Path
@@ -48,6 +47,9 @@ from repro.runtime.recovery import (FaultScript, RecoveryError, RecoveryPlan,
                                     StreamRecovery, _flatten_opt,
                                     _unflatten_opt, orchestration_timeline,
                                     resolve_policy, shard_slices)
+from repro.runtime.reliability import (ReliabilityConfig,
+                                       ReliabilityController,
+                                       ReliabilityEvent)
 from repro.train.state import init_state
 from repro.train.step import step_traffic, submit_step_traffic
 
@@ -55,8 +57,8 @@ PyTree = Any
 
 __all__ = [
     "ClusterConfig", "FabricConfig", "FaultScript", "RecoveryError",
-    "RecoveryPlan", "RecoveryPolicy", "RecoveryReport", "SimCluster",
-    "Worker", "shard_slices",
+    "RecoveryPlan", "RecoveryPolicy", "RecoveryReport", "ReliabilityConfig",
+    "SimCluster", "Worker", "shard_slices",
 ]
 
 
@@ -134,10 +136,14 @@ class SimCluster:
                  cluster: Optional[ClusterConfig] = None,
                  fabric: Optional[FabricConfig] = None,
                  recovery: Union[str, RecoveryPolicy, None] = None,
+                 reliability: Optional[ReliabilityConfig] = None,
                  **legacy):
         """Build a simulated cluster from `ClusterConfig` (model/batch
         knobs) + `FabricConfig` (link knobs) + a recovery policy
-        ("stream" | "compute" | "hybrid" or a `RecoveryPolicy` instance).
+        ("stream" | "compute" | "hybrid" or a `RecoveryPolicy` instance)
+        + a `ReliabilityConfig` for the self-driving control loop
+        (heartbeat/scan cadence, straggler + gray-link policy, adaptive
+        checkpoint cadence — defaults match `DetectionTimeline`).
 
         The old flat kwargs (`dp=`, `link_bw=`, ...) still work but emit a
         `DeprecationWarning`; see also `SimCluster.from_kwargs`."""
@@ -165,12 +171,20 @@ class SimCluster:
         self.model = build_model(cfg)
         self.state = init_state(self.model, jax.random.key(seed))
         self.iteration = 0
+        rc = reliability if reliability is not None else ReliabilityConfig()
+        self.reliability_config = rc
         self.controller = StateController(dp=dp, pp=1, tp=1,
-                                          global_batch=global_batch)
+                                          global_batch=global_batch,
+                                          heartbeat_timeout=rc.timeout)
         self.indexer = TidIndexer(cc.dataset_size, global_batch, seed=seed)
         self.source = SyntheticTokens(cc.dataset_size, cc.seq_len,
                                       cfg.vocab_size, seed=seed)
-        self.detection = DetectionTimeline()
+        # the analytic timeline mirrors the live loop's cadence, so the
+        # measured detection latency validates against detection_time()
+        self.detection = DetectionTimeline(
+            heartbeat_period=rc.heartbeat_period,
+            controller_scan_period=rc.scan_period,
+            notify_latency=rc.notify_latency)
         # per-link fabric: one LinkScheduler per edge. The train loop's
         # allreduce volume loads every edge (TRAIN, per tier on a pod
         # fabric); each checkpoint artifact rides its routed edge path
@@ -222,6 +236,26 @@ class SimCluster:
         self._layout: Optional[Dict[str, Any]] = None
         self._lazy_done_at: Optional[int] = None
         self.loss_history: List[float] = []
+        # --- self-driving reliability loop (runtime/reliability.py) --- #
+        # per-worker slowdown multipliers (scenario-injected stragglers)
+        self._slow_factor: Dict[int, float] = {}
+        # last step's per-worker modeled durations, consumed by the loop
+        self.last_step_times: Optional[Dict[int, float]] = None
+        # sim seconds trained while the instant checkpoint spilled past the
+        # iteration boundary (the exposed complement of FCR)
+        self.exposed_seconds = 0.0
+        # the loop's on-clock detection replaces the analytic leg in the
+        # next recover(): latency measured from fault injection, and a flag
+        # that the sim clock already advanced THROUGH the detection window
+        self._measured_detection: Optional[float] = None
+        self._detection_elapsed = False
+        # provisioned bandwidth of scenario-degraded edges (heal restores)
+        self._spec_bw_edges: Dict[Edge, float] = {}
+        # everybody beats at attach (a fresh heartbeat table reads -inf,
+        # which a scan would misread as a pre-start breakdown)
+        for w in self.workers:
+            self.controller.beat(w.wid, now=0.0)
+        self.reliability = ReliabilityController(self, rc)
 
     @classmethod
     def from_kwargs(cls, cfg: ArchConfig,
@@ -337,7 +371,6 @@ class SimCluster:
         return step_traffic(self._grad_bytes, self.active_dp)
 
     def step(self) -> float:
-        t0 = time.monotonic()
         batch = self._assemble_batch()
         # the allreduce volume for this step goes on EVERY live ring edge
         # (per-edge TRAIN), preempting any in-flight STATE chunks there
@@ -347,12 +380,18 @@ class SimCluster:
         jax.block_until_ready(loss)
         self.iteration += 1
         self._shard_and_backup()
+        # per-worker MODELED durations (sim seconds, never wall time): the
+        # synchronous step paces at the slowest worker, so an injected
+        # straggler stretches everyone's iteration — exactly what the
+        # reliability loop's EWMAs watch for
+        step_times: Dict[int, float] = {}
         for w in self.workers[:self.active_dp]:
             w.engine.maybe_full_checkpoint(
                 self.iteration, self.state if w.wid == 0 else
                 {"marker": np.zeros(1)}, t=self.sim_time)
-            self.controller.beat(w.wid)
-            w.step_times.append(time.monotonic() - t0)
+            dt_w = self.t_iter_model * self._slow_factor.get(w.wid, 1.0)
+            step_times[w.wid] = dt_w
+            w.step_times.append(dt_w)
         # advance the link model one modeled iteration in a single window:
         # the fabric clock is event-ordered, so a cross-pod (multi-hop)
         # instant stream lands at its exact store-and-forward instant inside
@@ -360,7 +399,14 @@ class SimCluster:
         # before the boundary were hidden (the FCR condition, emergent from
         # the transport instead of Eq. 2) — tracked globally and per
         # delivering fabric edge
-        self.sim_time += self.t_iter_model
+        dt = max(step_times.values()) if step_times else self.t_iter_model
+        self.sim_time += dt
+        # live workers heartbeat ON THE SIM CLOCK at the step boundary — a
+        # dead worker's slot freezes and the liveness scan finds it
+        for w in self.workers[:self.active_dp]:
+            if w.alive:
+                self.controller.beat(w.wid, now=self.sim_time)
+        self.last_step_times = step_times
         self.transport.run(until=self.sim_time)
         tickets = []
         for w in self.workers[:self.active_dp]:
@@ -385,6 +431,8 @@ class SimCluster:
                 self.instant_hidden += 1
             else:
                 self.instant_exposed += 1
+                self.exposed_seconds += dt
+        self.reliability.tick(self.sim_time)
         self.loss_history.append(float(loss))
         return float(loss)
 
@@ -392,10 +440,55 @@ class SimCluster:
         return [self.step() for _ in range(n_steps)]
 
     # ------------------------------------------------------------------ #
+    # Self-driving reliability surface (gray failures, stragglers, stalls)
+    # ------------------------------------------------------------------ #
+    def advance_idle(self, dt: float) -> List[ReliabilityEvent]:
+        """Advance the sim clock `dt` seconds with training STALLED — the
+        collective hangs on a failed worker, no step completes. Live
+        workers still heartbeat (their processes are fine), the fabric
+        drains, and the reliability loop scans: this is the window in which
+        on-clock failure detection happens. Returns the loop's events."""
+        self.sim_time += dt
+        self.transport.run(until=self.sim_time)
+        for w in self.workers[:self.active_dp]:
+            if w.alive:
+                self.controller.beat(w.wid, now=self.sim_time)
+        return self.reliability.tick(self.sim_time)
+
+    def set_straggler(self, wid: int, factor: float) -> None:
+        """Worker `wid` now takes `factor` x the modeled iteration time
+        (thermal throttling, a sick HBM stack, a noisy neighbor...)."""
+        self._slow_factor[wid] = float(factor)
+
+    def clear_straggler(self, wid: int) -> None:
+        self._slow_factor.pop(wid, None)
+
+    def degrade_edge(self, u: int, v: int, factor: float) -> None:
+        """Silently degrade link (u, v) to `factor` x its current rate — a
+        gray failure: the link is up, routing still uses it, but traffic
+        crawls. Only the reliability loop's observed-throughput scan can
+        tell (`set_bandwidth` is the fabric model's knob, not a signal any
+        worker receives)."""
+        e = edge_key(u, v)
+        sch = self.topology.links[e]
+        self._spec_bw_edges.setdefault(e, sch.bw)
+        self.topology.set_bandwidth(u, v, sch.bw * factor)
+
+    def heal_edge(self, u: int, v: int) -> None:
+        """Repair a degraded link to its provisioned rate and lift any
+        quarantine the reliability loop placed on it."""
+        e = edge_key(u, v)
+        spec = self._spec_bw_edges.pop(e, None)
+        if spec is not None:
+            self.topology.set_bandwidth(u, v, spec)
+        self.reliability.release_edge(u, v)
+
+    # ------------------------------------------------------------------ #
     # Failure injection + recovery
     # ------------------------------------------------------------------ #
     def inject_failure(self, wids: List[int], *, hardware: bool = False
                        ) -> None:
+        self.reliability.note_failure(wids, self.sim_time)
         for wid in wids:
             self.workers[wid].alive = False
             # the node's ring edges go dark: nothing routes through it
@@ -420,9 +513,10 @@ class SimCluster:
         between holder and newcomer."""
         report = inject_storm(self.topology, seed, pods=pods,
                               edge_failures=edge_failures)
-        for wid in report.nodes:
-            if wid < len(self.workers):
-                self.workers[wid].alive = False
+        dead = [wid for wid in report.nodes if wid < len(self.workers)]
+        self.reliability.note_failure(dead, self.sim_time)
+        for wid in dead:
+            self.workers[wid].alive = False
         self.last_storm = report
         return report
 
@@ -515,6 +609,13 @@ class SimCluster:
                                      is_dp_rank0=True, t=self.sim_time)
             self._lazy_done_at = self.iteration
         t_orch = sum(timeline.values())
+        if self._detection_elapsed:
+            # the reliability loop detected this breakdown ON the sim clock
+            # (advance_idle windows) — the detection leg already elapsed, so
+            # the streams must not wait through it a second time. The
+            # timeline still reports it (measured): it is part of the
+            # failover the job experienced.
+            t_orch -= timeline.get("detection", 0.0)
 
         plan = pol.plan(self, failed, faults, timeline=timeline,
                         t_start=self.sim_time + t_orch)
@@ -528,8 +629,11 @@ class SimCluster:
         for wid in failed:
             self.workers[wid].alive = True
             self.workers[wid].host_alive = True
-            self.controller.beat(wid)
+            self.controller.beat(wid, now=self.sim_time)
             self.workers[wid].loader.repartition(self.active_dp)
+        self.reliability.on_recovered(failed)
+        self._measured_detection = None
+        self._detection_elapsed = False
         # a completed recovery repairs the storm's fabric damage along with
         # the pods: the recovery STREAMS had to race around the dark edges
         # (DCN detours), but the healed job trains on a whole fabric again
@@ -609,4 +713,13 @@ class SimCluster:
             w.engine.transport = self.transport
             if not w.alive:
                 self.topology.fail_node(w.wid)
+        # the reliability loop's index-keyed books (EWMAs, quarantines, spec
+        # snapshots) are meaningless under the new numbering/fabric
+        self._slow_factor.clear()
+        self._spec_bw_edges.clear()
+        self.last_step_times = None
+        for w in self.workers:
+            if w.alive:
+                self.controller.beat(w.wid, now=self.sim_time)
+        self.reliability.on_rescale()
         return self.dp

@@ -96,9 +96,17 @@ class FaultScript:
 def orchestration_timeline(cluster, faults: FaultScript) -> Dict[str, float]:
     """The recovery legs every policy shares: failure detection and
     replacement-pod creation (hardware pods re-image, §6.2), with
-    dependency install pre-pulled away (Table 5)."""
+    dependency install pre-pulled away (Table 5).
+
+    The detection leg prefers the cluster's MEASURED latency when its
+    reliability loop detected the breakdown on the sim clock
+    (`runtime/reliability.py`); the analytic `DetectionTimeline` worst case
+    is the fallback for manually scripted inject-then-recover flows."""
+    measured = getattr(cluster, "_measured_detection", None)
+    detection = (float(measured) if measured is not None
+                 else cluster.detection.detection_time())
     return {
-        "detection": cluster.detection.detection_time(),
+        "detection": detection,
         "pod_creation": 7.0 if faults.hardware else 0.5,
         "dependency_install": 0.0,
     }

@@ -21,8 +21,10 @@ class StragglerPolicy:
 
 
 class StragglerDetector:
-    def __init__(self, n_workers: int, policy: StragglerPolicy = StragglerPolicy()):
-        self.policy = policy
+    def __init__(self, n_workers: int, policy: Optional[StragglerPolicy] = None):
+        # default built per-instance: a shared StragglerPolicy() default
+        # would alias tuning across every detector in the process
+        self.policy = policy if policy is not None else StragglerPolicy()
         self.ewma = np.zeros(n_workers)
         self.count = np.zeros(n_workers, dtype=np.int64)
 
@@ -52,7 +54,15 @@ class StragglerDetector:
 
 def mitigation_speedup(step_times: np.ndarray, straggler_factor: float
                        ) -> float:
-    """Expected step-time improvement from migrating the straggler away."""
-    with_straggler = step_times.max() * straggler_factor
-    without = np.sort(step_times)[-1]
+    """Expected step-time improvement from migrating the straggler away.
+
+    `step_times` are the healthy per-worker baselines; the straggler runs at
+    `straggler_factor` x the slowest of them. After migration the cluster
+    paces at the max over the *remaining* workers — the straggler's own
+    (inflated) time must not appear in the denominator.
+    """
+    base = np.sort(np.asarray(step_times, dtype=float))
+    with_straggler = base[-1] * straggler_factor
+    rest = base[:-1]
+    without = rest[-1] if rest.size else with_straggler
     return with_straggler / max(without, 1e-9)

@@ -121,6 +121,51 @@ def test_fleet_wall_clock_within_threshold_passes(tmp_path):
     assert "OK" in r.stdout
 
 
+def test_min_gated_speedup_drop_fails(tmp_path):
+    """The scenario-fleet lane's straggler speedup is min-gated: the loop
+    no longer migrating (speedup collapsing to ~1.0) must fail CI."""
+    prev = _dump(tmp_path / "p.json", [("fig10/straggler/speedup", "2.0")])
+    cur = _dump(tmp_path / "c.json", [("fig10/straggler/speedup", "1.0")])
+    r = _run(cur, prev)
+    assert r.returncode == 1, r.stdout + r.stderr
+    assert "dropped" in r.stdout
+
+
+def test_min_gated_speedup_growth_and_noise_pass(tmp_path):
+    prev = _dump(tmp_path / "p.json", [("fig10/straggler/speedup", "2.0")])
+    cur = _dump(tmp_path / "c.json", [("fig10/straggler/speedup", "1.9")])
+    assert _run(cur, prev).returncode == 0       # -5% is inside the budget
+    cur = _dump(tmp_path / "c.json", [("fig10/straggler/speedup", "3.0")])
+    assert _run(cur, prev).returncode == 0       # faster is never a fail
+
+
+def test_detection_latency_growth_fails(tmp_path):
+    prev = _dump(tmp_path / "p.json",
+                 [("fig10/loop/detection_latency_s", "0.36")])
+    cur = _dump(tmp_path / "c.json",
+                [("fig10/loop/detection_latency_s", "0.80")])
+    r = _run(cur, prev)
+    assert r.returncode == 1
+    assert "REGRESSION" in r.stdout
+
+
+def test_min_gated_row_vanishing_warns(tmp_path):
+    prev = _dump(tmp_path / "p.json", [("fig10/straggler/speedup", "2.0")])
+    cur = _dump(tmp_path / "c.json", [("fig10/straggler/speedup_NEW", "2.0")])
+    r = _run(cur, prev)
+    assert r.returncode == 0
+    assert "WARNING gated row missing" in r.stdout
+
+
+def test_custom_match_min_flag(tmp_path):
+    prev = _dump(tmp_path / "p.json", [("x/throughput_gbps", "10.0")])
+    cur = _dump(tmp_path / "c.json", [("x/throughput_gbps", "5.0")])
+    assert _run(cur, prev).returncode == 0        # not min-gated by default
+    r = _run(cur, prev, "--match-min", "throughput")
+    assert r.returncode == 1
+    assert "dropped" in r.stdout
+
+
 def test_custom_threshold_and_match(tmp_path):
     prev = _dump(tmp_path / "p.json", [("x/custom_row", "1.0")])
     cur = _dump(tmp_path / "c.json", [("x/custom_row", "1.4")])

@@ -1,0 +1,394 @@
+"""Control-plane surface tests: the straggler-detector fixes, the
+InterruptibleBarrier rendezvous, StateController exact-cover/consistency,
+and the ReliabilityController's gray-link + cadence loops on a fake
+cluster (no jax model — these are fast units; the end-to-end loop runs in
+test_scenario_fleet.py)."""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.controller import StateController
+from repro.core.detection import (DetectionTimeline, InterruptibleBarrier,
+                                  WorkerInterrupted)
+from repro.core.lccl import LinkTopology, edge_key
+from repro.runtime.reliability import (ReliabilityConfig,
+                                       ReliabilityController,
+                                       adapted_full_interval, observed_mtbf)
+from repro.runtime.straggler import (StragglerDetector, StragglerPolicy,
+                                     mitigation_speedup)
+
+
+# --------------------------------------------------------------------------- #
+# straggler.py fixes (pinned)
+# --------------------------------------------------------------------------- #
+def test_straggler_policy_not_shared_across_detectors():
+    """The old `policy: StragglerPolicy = StragglerPolicy()` default was
+    evaluated ONCE at def time — tuning one detector retuned every default-
+    constructed detector in the process."""
+    a = StragglerDetector(4)
+    b = StragglerDetector(4)
+    assert a.policy is not b.policy
+    a.policy.threshold = 99.0
+    assert b.policy.threshold == StragglerPolicy().threshold
+
+
+def test_straggler_explicit_policy_is_used():
+    pol = StragglerPolicy(threshold=2.5, min_observations=1)
+    det = StragglerDetector(3, policy=pol)
+    assert det.policy is pol
+
+
+def test_mitigation_speedup_excludes_straggler_from_denominator():
+    """Post-migration the cluster paces at the max over the REMAINING
+    workers. The old code divided by the straggler's own baseline
+    (sort[-1]), reporting `straggler_factor` regardless of the fleet."""
+    times = np.array([1.0, 1.0, 1.0, 2.0])
+    # straggler runs at 2.0 * 1.5 = 3.0; without it the pace is 1.0
+    assert mitigation_speedup(times, 1.5) == pytest.approx(3.0)
+    # the buggy version returned 1.5 here — pin that it does not
+    assert mitigation_speedup(times, 1.5) != pytest.approx(1.5)
+
+
+def test_mitigation_speedup_uniform_fleet():
+    times = np.ones(4)
+    assert mitigation_speedup(times, 2.0) == pytest.approx(2.0)
+
+
+def test_mitigation_speedup_single_worker_is_identity():
+    """Nobody to migrate to: no speedup."""
+    assert mitigation_speedup(np.array([1.0]), 3.0) == pytest.approx(1.0)
+
+
+def test_straggler_detector_flags_persistent_outlier():
+    det = StragglerDetector(4, policy=StragglerPolicy(min_observations=3))
+    for _ in range(5):
+        for w in range(4):
+            det.observe(w, 2.0 if w == 2 else 1.0)
+    assert det.stragglers() == [2]
+    assert det.cluster_step_time() == pytest.approx(2.0)
+
+
+# --------------------------------------------------------------------------- #
+# InterruptibleBarrier (§6.1): breakdown interrupt beats timeout
+# --------------------------------------------------------------------------- #
+def test_barrier_interrupt_beats_timeout():
+    """A blocked collective wakes on the controller's breakdown
+    notification LONG before the (NCCL-style) timeout would fire."""
+    bar = InterruptibleBarrier(2)
+    caught = {}
+
+    def blocked():
+        t0 = time.monotonic()
+        try:
+            bar.wait(0, timeout=30.0)
+        except WorkerInterrupted as e:
+            caught["failed"] = e.failed_workers
+            caught["waited"] = time.monotonic() - t0
+
+    th = threading.Thread(target=blocked)
+    th.start()
+    time.sleep(0.05)
+    bar.interrupt([1])
+    th.join(timeout=5.0)
+    assert not th.is_alive()
+    assert caught["failed"] == [1]
+    assert caught["waited"] < 5.0          # nowhere near the 30 s timeout
+
+
+def test_barrier_broken_state_rejects_new_waiters_until_reset():
+    bar = InterruptibleBarrier(2)
+    bar.interrupt([0])
+    with pytest.raises(WorkerInterrupted):
+        bar.wait(1, timeout=0.1)
+    bar.reset()
+    # full rendezvous works again after reset
+    done = []
+
+    def waiter(w):
+        done.append(bar.wait(w, timeout=5.0))
+
+    th = threading.Thread(target=waiter, args=(0,))
+    th.start()
+    gen_last = bar.wait(1, timeout=5.0)
+    th.join(timeout=5.0)
+    assert not th.is_alive()
+    assert done[0] == gen_last             # same generation rendezvoused
+
+
+def test_barrier_generation_advances_per_rendezvous_and_reset():
+    bar = InterruptibleBarrier(1)
+    g0 = bar.wait(0)
+    g1 = bar.wait(0)
+    assert g1 == g0 + 1
+    bar.reset(n_workers=2)
+    assert bar.n == 2
+    g2_holder = []
+    th = threading.Thread(target=lambda: g2_holder.append(bar.wait(0, 5.0)))
+    th.start()
+    g2 = bar.wait(1, timeout=5.0)
+    th.join(timeout=5.0)
+    assert g2_holder[0] == g2
+    assert g2 > g1                          # reset bumped the generation
+
+
+def test_barrier_timeout_is_the_slow_path():
+    bar = InterruptibleBarrier(2)
+    with pytest.raises(TimeoutError):
+        bar.wait(0, timeout=0.05)
+
+
+# --------------------------------------------------------------------------- #
+# StateController: exact cover + consistency
+# --------------------------------------------------------------------------- #
+def _cover(ctl: StateController, iteration: int, dataset: int) -> None:
+    """The active ranks' ranges exactly tile the iteration's global batch."""
+    a = ctl.assignment(iteration, dataset)
+    spans = sorted(a.ranges.values())
+    assert len(spans) == ctl.active_dp
+    start = (iteration * ctl.global_batch) % dataset
+    assert spans[0][0] == start
+    for (lo, hi), (lo2, _) in zip(spans, spans[1:]):
+        assert hi == lo2                   # contiguous, no overlap, no gap
+    assert spans[-1][1] - spans[0][0] == ctl.global_batch
+
+
+def test_shrink_restore_exact_cover():
+    ctl = StateController(dp=4, pp=1, tp=1, global_batch=8)
+    _cover(ctl, 3, 64)
+    ctl.shrink_dp([2])
+    ctl.global_batch = 6                   # what SimCluster.shrink recomputes
+    _cover(ctl, 4, 64)
+    assert ctl.active_dp == 3
+    ctl.shrink_dp([0])
+    ctl.global_batch = 4
+    _cover(ctl, 5, 64)
+    ctl.restore_dp()
+    ctl.global_batch = 8
+    assert ctl.active_dp == 4
+    _cover(ctl, 6, 64)
+
+
+def test_shrink_dp_dedupes_lost_groups_and_floors_at_one():
+    ctl = StateController(dp=3, pp=1, tp=1, global_batch=6)
+    assert ctl.shrink_dp([1, 1, 2]) == 1   # two distinct losses
+    assert ctl.shrink_dp([0]) == 1         # never below one
+    assert ctl.restore_dp(2) == 2
+
+
+def test_resolve_recovery_iteration_is_global_min():
+    ctl = StateController(dp=4, pp=1, tp=1, global_batch=8)
+    for d, it in enumerate([7, 5, 9, 6]):
+        ctl.report_ckpt(d, it)
+    assert ctl.resolve_recovery_iteration() == 5
+    # a shrink drops the trailing groups from the consistency vote
+    ctl.report_ckpt(3, 1)
+    ctl.shrink_dp([3])
+    assert ctl.resolve_recovery_iteration() == 5
+
+
+def test_detect_failures_on_supplied_clock():
+    """Liveness runs on whatever clock the caller supplies (SimCluster
+    passes sim time) — no wall-clock reads in the detection path."""
+    ctl = StateController(dp=3, pp=1, tp=1, global_batch=6,
+                          heartbeat_timeout=1.0)
+    for w in range(3):
+        ctl.beat(w, now=0.0)
+    ctl.beat(0, now=5.0)
+    ctl.beat(2, now=5.0)
+    assert ctl.detect_failures(now=5.0) == [1]
+    assert ctl.detect_failures(now=0.9) == []
+
+
+# --------------------------------------------------------------------------- #
+# ReliabilityController units on a fake cluster (no jax, no model)
+# --------------------------------------------------------------------------- #
+class _FakeWorker:
+    def __init__(self, wid):
+        self.wid = wid
+        self.alive = True
+
+        class _Cfg:
+            full_every = 50
+        self.engine = type("E", (), {"cfg": _Cfg()})()
+
+
+class _FakeCluster:
+    """The duck-typed surface ReliabilityController drives."""
+
+    def __init__(self, dp=4, bw=1e9):
+        self.dp = dp
+        self.t_iter_model = 0.05
+        self.topology = LinkTopology(dp, bw, quantum=1 << 16)
+        self.controller = StateController(dp=dp, pp=1, tp=1,
+                                          global_batch=2 * dp,
+                                          heartbeat_timeout=0.2)
+        self.workers = [_FakeWorker(w) for w in range(dp)]
+        self.last_step_times = None
+        self._measured_detection = None
+        self._detection_elapsed = False
+        for w in range(dp):
+            self.controller.beat(w, now=0.0)
+
+    def shard_nbytes(self):
+        return 4096.0
+
+    def clear_straggler(self, wid):
+        pass
+
+
+def _mk_loop(**over):
+    cfg = ReliabilityConfig(heartbeat_period=0.2, scan_period=0.2,
+                            notify_latency=0.01, **over)
+    clu = _FakeCluster()
+    return clu, ReliabilityController(clu, cfg)
+
+
+def test_loop_detects_silent_worker_within_one_heartbeat_of_analytic():
+    clu, loop = _mk_loop()
+    t = 0.0
+    # healthy cadence, then worker 2 goes silent at t=0.25
+    while t < 1.2:
+        t = round(t + 0.05, 10)
+        for w in range(clu.dp):
+            if w == 2 and t > 0.25:
+                continue
+            clu.controller.beat(w, now=t)
+        if t > 0.25 and 2 in [x.wid for x in clu.workers]:
+            loop.note_failure([2], 0.25) if 2 not in loop.failed_at else None
+        loop.tick(t)
+    assert 2 in loop.detected
+    lat = loop.last_detection_latency
+    analytic = DetectionTimeline(0.2, 0.2, 0.01).detection_time()
+    # measured within one heartbeat period of the closed-form worst case
+    assert abs(lat - analytic) <= 0.2 + 1e-9
+    assert clu._detection_elapsed and clu._measured_detection == lat
+
+
+def test_loop_gray_edge_quarantined_from_observed_throughput():
+    clu, loop = _mk_loop(min_gray_observations=1)
+    e = edge_key(1, 2)
+    sch = clu.topology.links[e]
+    # healthy traffic, then the link silently degrades to 20% of spec
+    for t in (0.05, 0.10, 0.15):
+        sch.submit("TRAIN", 1e7, t)
+    clu.topology.run(until=0.2)
+    loop.tick(0.2)
+    assert e not in loop.quarantined
+    clu.topology.set_bandwidth(1, 2, 0.2e9)
+    for t in (0.25, 0.30, 0.35):
+        sch.submit("TRAIN", 1e7, t)
+    clu.topology.run(until=0.6)
+    loop.tick(0.6)
+    assert e in loop.quarantined
+    assert not clu.topology.edge_up(1, 2)   # routing detours around it
+    ev = [x for x in loop.events if x.kind == "gray_edge"]
+    assert len(ev) == 1
+    assert ev[0].detail["observed_bps"] == pytest.approx(0.2e9)
+    # repair lifts the quarantine
+    loop.release_edge(1, 2)
+    assert clu.topology.edge_up(1, 2)
+
+
+def test_loop_healthy_edges_never_quarantined():
+    clu, loop = _mk_loop(min_gray_observations=1)
+    for e, sch in clu.topology.links.items():
+        sch.submit("TRAIN", 1e7, 0.01)
+    clu.topology.run(until=0.5)
+    loop.tick(0.5)
+    assert loop.quarantined == {}
+
+
+def test_adapted_cadence_closed_form_and_clamps():
+    assert adapted_full_interval(200.0, 1.0) == pytest.approx(20.0)
+    assert observed_mtbf([10.0, 30.0, 50.0]) == pytest.approx(20.0)
+    assert observed_mtbf([10.0]) is None
+    clu, loop = _mk_loop(ckpt_cost_s=0.1, min_full_every=5,
+                         max_full_every=500)
+    loop.detection_times = [1.0, 5.0]      # observed MTBF = 4 s
+    loop._adapt_cadence(5.0)
+    expect = int(round(adapted_full_interval(4.0, 0.1) / 0.05))
+    assert loop.current_full_every == expect
+    for w in clu.workers:
+        assert w.engine.cfg.full_every == expect
+    # degenerate trace clamps at the floor instead of thrashing
+    loop.detection_times = [2.0, 2.0]
+    loop._adapt_cadence(6.0)
+    assert loop.current_full_every == 5
+
+
+def test_straggler_migration_rebinds_role_to_spare():
+    clu, loop = _mk_loop(straggler=StragglerPolicy(min_observations=3))
+    for _ in range(5):
+        clu.last_step_times = {w: (0.1 if w == 1 else 0.05)
+                               for w in range(clu.dp)}
+        loop.tick(0.0)
+        if any(x.kind == "straggler_migrate" for x in loop.events):
+            break                       # migrated: stop feeding slow steps
+    ev = [x for x in loop.events if x.kind == "straggler_migrate"]
+    assert len(ev) == 1 and ev[0].detail["worker"] == 1
+    spare = ev[0].detail["spare_rank"]
+    assert spare >= clu.dp
+    roles = clu.controller.roles
+    assert roles.rank_to_role[spare].dp == 1
+    assert 1 not in roles.rank_to_role      # old rank released
+    # detector state was reset in the migrating tick: the worker is not
+    # immediately re-flagged off its pre-migration history
+    assert loop.straggler.count[1] == 0
+
+
+# --------------------------------------------------------------------------- #
+# hypothesis property tests (skipped when hypothesis is absent)
+# --------------------------------------------------------------------------- #
+try:
+    import hypothesis  # noqa: F401
+    _HAVE_HYPOTHESIS = True
+except ImportError:
+    _HAVE_HYPOTHESIS = False
+
+if _HAVE_HYPOTHESIS:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    @given(st.integers(1, 16), st.integers(1, 8), st.integers(0, 1000),
+           st.data())
+    @settings(max_examples=60, deadline=None)
+    def test_exact_cover_under_random_shrinks(dp, per, iteration, data):
+        """However the job shrinks, the active ranks' ranges always tile
+        the (recomputed) global batch contiguously."""
+        ctl = StateController(dp=dp, pp=1, tp=1, global_batch=dp * per)
+        n_lost = data.draw(st.integers(0, dp - 1))
+        lost = data.draw(st.lists(st.integers(0, dp - 1),
+                                  min_size=n_lost, max_size=n_lost,
+                                  unique=True))
+        ctl.shrink_dp(lost)
+        ctl.global_batch = ctl.active_dp * per
+        _cover(ctl, iteration, 4096)
+
+    @given(st.lists(st.floats(0.0, 1e5, allow_nan=False), min_size=2,
+                    max_size=32))
+    @settings(max_examples=60, deadline=None)
+    def test_observed_mtbf_invariants(ts):
+        m = observed_mtbf(ts)
+        assert m is not None and m >= 0.0
+        # shift invariance: MTBF depends on spacing, not the epoch
+        m2 = observed_mtbf([t + 123.0 for t in ts])
+        assert m2 == pytest.approx(m, abs=1e-6)
+
+    @given(st.floats(1e-3, 1e6), st.floats(1e-3, 1e3))
+    @settings(max_examples=60, deadline=None)
+    def test_adapted_interval_monotone_in_mtbf(mtbf, cost):
+        a = adapted_full_interval(mtbf, cost)
+        b = adapted_full_interval(2 * mtbf, cost)
+        assert b > a                        # rarer failures, rarer ckpts
+        assert a == pytest.approx((2 * cost * mtbf) ** 0.5)
+
+    @given(st.floats(0.1, 10.0), st.lists(
+        st.floats(0.01, 5.0, allow_nan=False), min_size=2, max_size=16))
+    @settings(max_examples=60, deadline=None)
+    def test_mitigation_speedup_at_least_factor_over_rest(factor, times):
+        """Speedup >= straggler_factor whenever the straggler was already
+        the pacing worker (it is factor * max / second_max >= factor)."""
+        sp = mitigation_speedup(np.array(times), max(factor, 1.0))
+        assert sp >= max(factor, 1.0) - 1e-9

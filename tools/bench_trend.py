@@ -14,7 +14,13 @@ contains one of the `--match` substrings, default ``state_leg`` /
 gates the checkpoint-free compute-recovery rows the same way) /
 ``wall_s`` (the fleet-bench job's `fleet/*/wall_s` rows — a >20% wall
 slowdown on the same runner class means the compiled-plan fast path
-regressed, which is exactly what that job exists to catch). All other
+regressed, which is exactly what that job exists to catch) /
+``detection_latency`` (the scenario-fleet job's measured reliability-loop
+detection rows — deterministic sim seconds, so any growth is a real
+control-loop regression). Rows matching `--match-min` (default
+``speedup``) gate the OPPOSITE direction: larger is better, and a >20%
+DROP fails — e.g. `fig10/straggler/speedup` collapsing to ~1.0 means the
+loop stopped migrating stragglers. All other
 numeric rows are reported informationally. Non-numeric derived values
 (booleans, labels) are skipped — unless the row is gated, in which case a
 WARNING prints so the gate can't be disabled silently; likewise for a
@@ -36,7 +42,8 @@ from pathlib import Path
 from typing import Dict, List, Optional, Sequence, Tuple
 
 DEFAULT_MATCH = ("state_leg", "state_recovery", "recovery_total_s",
-                 "replay_compute", "wall_s")
+                 "replay_compute", "wall_s", "detection_latency")
+DEFAULT_MATCH_MIN = ("speedup",)
 DEFAULT_THRESHOLD = 0.2
 
 
@@ -55,18 +62,23 @@ def _numeric(value) -> Optional[float]:
 
 def compare(current: Path, previous: Path,
             match: Sequence[str] = DEFAULT_MATCH,
-            threshold: float = DEFAULT_THRESHOLD
+            threshold: float = DEFAULT_THRESHOLD,
+            match_min: Sequence[str] = DEFAULT_MATCH_MIN
             ) -> Tuple[List[str], List[str]]:
     """Diff two row dumps. Returns (report_lines, regressed_row_names):
-    a gated row regresses when its derived value grew by more than
+    a growth-gated row regresses when its derived value grew by more than
     `threshold` relative to the previous run (larger = slower for every
-    gated row, all of which are seconds)."""
+    such row, all of which are seconds); a min-gated row (`match_min`)
+    regresses when it SHRANK by more than `threshold` (larger = better,
+    e.g. a mitigation speedup)."""
     cur, prev = _rows(current), _rows(previous)
     lines, regressions = [], []
     for name in sorted(set(cur) | set(prev)):
         cv = _numeric(cur[name]["derived"]) if name in cur else None
         pv = _numeric(prev[name]["derived"]) if name in prev else None
-        gated = any(m in name for m in match)
+        gated_max = any(m in name for m in match)
+        gated_min = any(m in name for m in match_min)
+        gated = gated_max or gated_min
         if cv is None or pv is None:
             if gated:
                 # a gated row vanishing (rename/removal) or turning
@@ -85,9 +97,12 @@ def compare(current: Path, previous: Path,
         tag = " [gated]" if gated else ""
         # pv == 0 with any growth counts: a zero baseline going positive is
         # unbounded relative growth, not a free pass
-        if gated and cv > pv * (1.0 + threshold) and cv > pv:
+        if gated_max and cv > pv * (1.0 + threshold) and cv > pv:
             regressions.append(name)
             tag = f" << REGRESSION (> {threshold:.0%})"
+        elif gated_min and cv < pv * (1.0 - threshold) and cv < pv:
+            regressions.append(name)
+            tag = f" << REGRESSION (dropped > {threshold:.0%})"
         lines.append(f"{name}: {pv:.6g} -> {cv:.6g} ({delta_str}){tag}")
     return lines, regressions
 
@@ -105,6 +120,11 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                     metavar="SUBSTR",
                     help="gate rows whose name contains SUBSTR "
                          f"(repeatable; default {list(DEFAULT_MATCH)})")
+    ap.add_argument("--match-min", action="append", default=None,
+                    metavar="SUBSTR",
+                    help="min-gate rows (regression = value DROPPED by "
+                         "more than the threshold; repeatable; default "
+                         f"{list(DEFAULT_MATCH_MIN)})")
     args = ap.parse_args(argv)
     if not args.previous.exists():
         print(f"bench-trend: no previous artifact at {args.previous} "
@@ -112,7 +132,9 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
         return 0
     lines, regressions = compare(args.current, args.previous,
                                  match=args.match or DEFAULT_MATCH,
-                                 threshold=args.threshold)
+                                 threshold=args.threshold,
+                                 match_min=args.match_min
+                                 or DEFAULT_MATCH_MIN)
     print(f"bench-trend: {args.previous} -> {args.current}")
     for line in lines:
         print("  " + line)

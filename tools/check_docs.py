@@ -46,6 +46,9 @@ PUBLIC_API = (
     "PodFabric",
     "TrafficPlan",
     "compile_traffic_plan",
+    "ReliabilityConfig",
+    "Scenario",
+    "run_scenario",
 )
 
 FENCE = re.compile(r"```(\w+)?\n(.*?)```", re.DOTALL)
