@@ -13,7 +13,6 @@ Responsibilities (all lightweight; scalability measured in fig10 benchmark):
 """
 from __future__ import annotations
 
-import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -64,11 +63,13 @@ class StateController:
         self.active_dp = dp
 
     # ---------------- liveness ---------------- #
-    def beat(self, worker: int, now: Optional[float] = None) -> None:
-        self.heartbeats.beat(worker, time.monotonic() if now is None else now)
+    # `now` is the SIM clock and is required: the old wall-clock fallback
+    # (`time.monotonic()` when now was None) coupled detection latency to
+    # host scheduling and broke replay bit-identity (simlint SIM001).
+    def beat(self, worker: int, now: float) -> None:
+        self.heartbeats.beat(worker, now)
 
-    def detect_failures(self, now: Optional[float] = None) -> List[int]:
-        now = time.monotonic() if now is None else now
+    def detect_failures(self, now: float) -> List[int]:
         return list(self.heartbeats.failed(now, self.timeout))
 
     # ---------------- data indexing (TID -> indices) ---------------- #

@@ -125,13 +125,14 @@ def schedule_state_phase(state_bytes: float, bandwidth: float, *,
 
 def fftrainer_timeline(n_workers: int, state_bytes_per_worker: float,
                        costs: FailoverCosts = FailoverCosts(),
-                       detection: DetectionTimeline = DetectionTimeline(),
+                       detection: Optional[DetectionTimeline] = None,
                        train_traffic: TrainTraffic = (),
                        scheduler: Optional[LinkScheduler] = None,
                        topology: Optional[LinkTopology] = None,
                        path: Optional[Sequence[Edge]] = None,
                        paths: Optional[Sequence[Sequence[Edge]]] = None
                        ) -> Dict[str, float]:
+    detection = detection if detection is not None else DetectionTimeline()
     t_net = costs.conn_base + costs.conn_per_worker * n_workers
     t_state = costs.state_ramp_fft + schedule_state_phase(
         state_bytes_per_worker, costs.neighbor_bw, quantum=costs.quantum,
@@ -152,7 +153,7 @@ def fftrainer_timeline(n_workers: int, state_bytes_per_worker: float,
 
 def compute_recovery_timeline(n_workers: int, state_bytes_per_worker: float,
                               costs: FailoverCosts = FailoverCosts(),
-                              detection: DetectionTimeline = DetectionTimeline(),
+                              detection: Optional[DetectionTimeline] = None,
                               replay: Optional["ReplayCostModel"] = None,
                               n_replayers: int = 2) -> Dict[str, float]:
     """Checkpoint-free recovery flow ("All is Not Lost", PAPERS.md): same
@@ -164,6 +165,7 @@ def compute_recovery_timeline(n_workers: int, state_bytes_per_worker: float,
     seconds instead (plus `compute_seconds_burned`, the total worker
     compute spent, reported out-of-timeline)."""
     from repro.train.step import ReplayCostModel, replay_compute_cost
+    detection = detection if detection is not None else DetectionTimeline()
     cost = replay_compute_cost(state_bytes_per_worker,
                                n_replayers=n_replayers,
                                model=replay or ReplayCostModel())
@@ -184,7 +186,7 @@ def compute_recovery_timeline(n_workers: int, state_bytes_per_worker: float,
 
 def hybrid_recovery_timeline(n_workers: int, state_bytes_per_worker: float,
                              costs: FailoverCosts = FailoverCosts(),
-                             detection: DetectionTimeline = DetectionTimeline(),
+                             detection: Optional[DetectionTimeline] = None,
                              replay: Optional["ReplayCostModel"] = None,
                              n_replayers: int = 2,
                              train_traffic: TrainTraffic = (),
@@ -198,6 +200,7 @@ def hybrid_recovery_timeline(n_workers: int, state_bytes_per_worker: float,
     The closed-form analogue of `HybridRecovery` in runtime/recovery.py —
     useful for the table5 what-if rows without building a cluster."""
     from repro.train.step import ReplayCostModel, replay_compute_cost
+    detection = detection if detection is not None else DetectionTimeline()
     t_net = costs.conn_base + costs.conn_per_worker * n_workers
     t_stream = costs.state_ramp_fft + schedule_state_phase(
         state_bytes_per_worker, costs.neighbor_bw, quantum=costs.quantum,

@@ -1,0 +1,442 @@
+"""simlint: per-rule positive/negative fixtures, pragma mechanics, the
+SIM004 bump-deletion acceptance check, and the CLI contract.
+
+Fixtures go through `tools.simlint.lint_text(source, rel)`, which runs
+the default rule registry on a source string as if it lived at repo path
+`rel` — the same engine path CI uses, minus the filesystem walk.
+"""
+import json
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import pytest
+
+ROOT = Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(ROOT))
+
+from tools.simlint import default_rules, lint_text  # noqa: E402
+from tools.simlint.engine import run  # noqa: E402
+from tools.simlint.rules.api_pin import PUBLIC_API  # noqa: E402
+from tools.simlint.rules.deprecations import DeprecatedKwargsRule  # noqa: E402
+
+SIM_REL = "src/repro/runtime/_fixture_.py"
+
+
+def codes(source, rel=SIM_REL):
+    return [f.code for f in lint_text(textwrap.dedent(source), rel)]
+
+
+def findings(source, rel=SIM_REL):
+    return lint_text(textwrap.dedent(source), rel)
+
+
+def test_registry_has_all_eight_rules():
+    assert [r.code for r in default_rules()] == [
+        "SIM001", "SIM002", "SIM003", "SIM004",
+        "SIM005", "SIM006", "SIM007", "SIM008"]
+
+
+# --------------------------- SIM001 --------------------------- #
+def test_sim001_flags_wall_clock_reads():
+    src = """
+    import time
+    from time import perf_counter
+    from datetime import datetime
+
+    def beat(worker, now=None):
+        now = time.monotonic() if now is None else now
+        return now
+
+    def stamp():
+        return perf_counter(), datetime.now()
+    """
+    got = codes(src)
+    assert got.count("SIM001") == 3
+
+
+def test_sim001_negative_and_allowlist():
+    clean = """
+    def beat(worker, now):
+        return now
+    """
+    assert codes(clean) == []
+    walled = """
+    import time
+
+    def cli_timer():
+        return time.monotonic()
+    """
+    # host-side launch code is allowlisted; test code is out of scope
+    assert codes(walled, rel="src/repro/launch/_fixture_.py") == []
+    assert codes(walled, rel="tests/_fixture_.py") == []
+    assert "SIM001" in codes(walled)
+
+
+# --------------------------- SIM002 --------------------------- #
+def test_sim002_flags_global_rng_draws():
+    src = """
+    import random
+    import numpy as np
+
+    def storm():
+        random.shuffle([1, 2])
+        x = np.random.rand(3)
+        rng = np.random.default_rng()
+        return x, rng
+    """
+    assert codes(src).count("SIM002") == 3
+
+
+def test_sim002_negative_seeded_generators():
+    src = """
+    import random
+    import numpy as np
+
+    def storm(seed):
+        rng = np.random.default_rng(seed)
+        r = random.Random(seed)
+        return rng.random(), r.random()
+    """
+    assert codes(src) == []
+
+
+# --------------------------- SIM003 --------------------------- #
+def test_sim003_flags_mutable_defaults():
+    src = """
+    from dataclasses import dataclass
+
+    @dataclass
+    class StragglerPolicy:
+        threshold: float = 1.5
+
+    @dataclass
+    class ReliabilityConfig:
+        straggler: StragglerPolicy = StragglerPolicy()
+
+    def observe(samples=[], policy=StragglerPolicy()):
+        samples.append(policy)
+    """
+    # the shared dataclass field, the [] default, and the shared policy
+    # default — the PR 7 bug shape twice over
+    assert codes(src).count("SIM003") == 3
+
+
+def test_sim003_negative_factories_and_frozen():
+    src = """
+    from dataclasses import dataclass, field
+
+    @dataclass(frozen=True)
+    class Frozen:
+        x: int = 0
+
+    @dataclass
+    class Cfg:
+        items: list = field(default_factory=list)
+        frozen: Frozen = Frozen()
+
+    def observe(samples=None, cfg=Frozen()):
+        return samples, cfg
+    """
+    assert codes(src) == []
+
+
+# --------------------------- SIM004 --------------------------- #
+def test_sim004_flags_unbumped_mutation_and_missed_path():
+    src = """
+    class LinkTopology:
+        def _bump_epoch(self):
+            self._epoch += 1
+
+        def fail_node(self, n):
+            self.dark_nodes.add(n)
+
+        def set_bw(self, u, v, bw, only_up=True):
+            if only_up and (u, v) not in self.links:
+                return
+            self.links[(u, v)].bw = bw
+            if bw > 0:
+                self._bump_epoch()
+    """
+    got = codes(src)
+    assert got.count("SIM004") == 2    # fail_node + the bw>0-only branch
+
+
+def test_sim004_negative_every_path_bumps():
+    src = """
+    class LinkTopology:
+        def __init__(self):
+            self.dark_nodes = set()       # construction is exempt
+
+        def _bump_epoch(self):
+            self._epoch += 1
+
+        def fail_node(self, n):
+            self.dark_nodes.add(n)
+            self._bump_epoch()
+
+        def set_bw(self, u, v, bw):
+            if (u, v) in self.links:
+                self.links[(u, v)].bw = bw
+            self._bump_epoch()
+
+        def read_only(self):
+            return sorted(self.dark_nodes)
+    """
+    assert codes(src) == []
+
+
+def test_sim004_ignores_non_topology_classes():
+    src = """
+    class Ledger:
+        def add(self, n):
+            self.dark_nodes = n
+    """
+    assert codes(src) == []
+
+
+MUTATING_METHODS = ("fail_node", "restore_node", "fail_edge",
+                    "restore_edge", "set_bandwidth")
+
+
+@pytest.mark.parametrize("method", MUTATING_METHODS)
+def test_sim004_acceptance_deleting_real_bump_fails(method):
+    """Acceptance: remove `self._bump_epoch()` from any topology-mutating
+    method of the REAL src/repro/core/lccl.py and SIM004 must fire."""
+    import ast
+
+    source = (ROOT / "src" / "repro" / "core" / "lccl.py").read_text()
+    tree = ast.parse(source)
+    fn = next(n for cls in ast.walk(tree)
+              if isinstance(cls, ast.ClassDef)
+              and cls.name in ("LinkTopology", "PodFabric")
+              for n in cls.body
+              if isinstance(n, ast.FunctionDef) and n.name == method)
+    lines = source.splitlines()
+    bump_lines = [i for i in range(fn.lineno, fn.end_lineno + 1)
+                  if "_bump_epoch()" in lines[i - 1]]
+    assert bump_lines, f"{method} has no _bump_epoch call to delete?"
+    for i in bump_lines:
+        indent = len(lines[i - 1]) - len(lines[i - 1].lstrip())
+        lines[i - 1] = " " * indent + "pass"
+    mutant = "\n".join(lines)
+    got = lint_text(mutant, rel="src/repro/core/_lccl_mutant_.py")
+    assert any(f.code == "SIM004" and method in f.message for f in got), \
+        f"SIM004 missed the deleted bump in {method}"
+
+
+def test_sim004_real_lccl_is_clean():
+    source = (ROOT / "src" / "repro" / "core" / "lccl.py").read_text()
+    got = lint_text(source, rel="src/repro/core/lccl.py")
+    assert [f for f in got if f.code == "SIM004"] == []
+
+
+# --------------------------- SIM005 --------------------------- #
+def test_sim005_flags_float_clock_equality():
+    src = """
+    def race(t_finish, t_start, dt):
+        if t_finish == t_start:
+            return True
+        return dt != 0.5
+    """
+    assert codes(src).count("SIM005") == 2
+
+
+def test_sim005_negative_sentinels_and_ordering():
+    src = """
+    def race(t, until, deadline, tier):
+        if until == float("inf") or t == 0:
+            return True
+        if tier == "dcn" or t == tier:
+            return False
+        return t <= deadline
+    """
+    assert codes(src) == []
+
+
+# --------------------------- SIM006 --------------------------- #
+def test_sim006_flags_set_and_dict_iteration_into_sinks():
+    src = """
+    def storm(sched, failed: set, links: dict):
+        for n in failed:
+            sched.submit("FAIL", n)
+        return [sched.submit("X", e) for e in links.items()]
+    """
+    assert codes(src).count("SIM006") == 2
+
+
+def test_sim006_negative_sorted_or_no_sink():
+    src = """
+    def storm(sched, failed: set, log):
+        for n in sorted(failed):
+            sched.submit("FAIL", n)
+        out = []
+        for n in failed:
+            out = out + [n]        # accumulation, not an event sink
+        return out
+    """
+    assert codes(src) == []
+
+
+# --------------------------- SIM007 --------------------------- #
+def test_sim007_flags_legacy_kwargs_everywhere():
+    src = """
+    def build():
+        clu = SimCluster(dp=4, link_bw=1e9)
+        clu.recover(hardware=True)
+        return SimCluster.from_kwargs(dp=2)
+    """
+    assert codes(src, rel="tests/_fixture_.py").count("SIM007") == 3
+    assert codes(src).count("SIM007") == 3
+
+
+def test_sim007_negative_new_api():
+    src = """
+    def build(cfg, fab):
+        clu = SimCluster(cluster=cfg, fabric=fab)
+        clu.recover(faults=None)
+        return clu
+    """
+    assert codes(src, rel="tests/_fixture_.py") == []
+
+
+# --------------------------- SIM008 --------------------------- #
+def test_sim008_real_init_matches_pin():
+    source = (ROOT / "src" / "repro" / "__init__.py").read_text()
+    assert lint_text(source, rel="src/repro/__init__.py") == []
+
+
+def test_sim008_flags_drift_and_missing_exports():
+    names = [n for n in PUBLIC_API if n != "SimCluster"] + ["RogueExport"]
+    source = "__all__ = %r\n_EXPORTS = %r\n" % (
+        names, {n: "repro.x" for n in PUBLIC_API})
+    got = lint_text(source, rel="src/repro/__init__.py")
+    msgs = "\n".join(f.message for f in got)
+    assert any(f.code == "SIM008" for f in got)
+    assert "SimCluster" in msgs          # pinned but not declared
+    assert "RogueExport" in msgs         # declared but not pinned
+
+
+# ------------------------ pragma mechanics ------------------------ #
+def test_pragma_with_justification_suppresses():
+    src = """
+    import time
+
+    def f():
+        return time.monotonic()  # simlint: disable=SIM001 -- fixture
+    """
+    assert codes(src) == []
+
+
+def test_pragma_without_justification_is_sim000():
+    src = """
+    import time
+
+    def f():
+        return time.monotonic()  # simlint: disable=SIM001
+    """
+    assert codes(src) == ["SIM000"]
+
+
+def test_pragma_in_comment_block_above_statement():
+    src = """
+    import time
+
+    def f():
+        # simlint: disable=SIM001 -- the justification may span a
+        # multi-line comment block directly above the statement
+        return time.monotonic()
+    """
+    assert codes(src) == []
+
+
+def test_pragma_mentioned_in_docstring_is_not_a_suppression():
+    src = '''
+    import time
+
+    def f():
+        """Docs may discuss `# simlint: disable=SIM001 -- like so`."""
+        return time.monotonic()
+    '''
+    assert codes(src) == ["SIM001"]
+
+
+def test_legacy_deprecated_ok_pragma_suppresses_sim007():
+    src = """
+    def build():
+        return SimCluster(dp=4)  # deprecated-ok: shim under test
+    """
+    assert codes(src, rel="tests/_fixture_.py") == []
+
+
+def test_legacy_pragma_reported_once_per_file(tmp_path):
+    mod = tmp_path / "src" / "mod.py"
+    mod.parent.mkdir(parents=True)
+    mod.write_text("a = SimCluster(dp=1)  # deprecated-ok: one\n"
+                   "b = SimCluster(dp=2)  # deprecated-ok: two\n")
+    report = run(["src"], [DeprecatedKwargsRule()], root=tmp_path)
+    assert report.findings == []
+    assert len(report.suppressed) == 2
+    assert report.legacy_pragma_files == ["src/mod.py"]
+
+
+# ----------------- PR 7 bug shapes stay machine-caught ----------------- #
+def test_pr7_wall_clock_heartbeat_bug_is_flagged():
+    src = """
+    import time
+
+    class StateController:
+        def beat(self, worker, now=None):
+            self.heartbeats.beat(
+                worker, time.monotonic() if now is None else now)
+    """
+    assert "SIM001" in codes(src, rel="src/repro/core/_fixture_.py")
+
+
+def test_pr7_shared_policy_default_bug_is_flagged():
+    src = """
+    from dataclasses import dataclass
+
+    @dataclass
+    class StragglerPolicy:
+        relative_threshold: float = 1.45
+
+    class ReliabilityController:
+        def __init__(self, straggler=StragglerPolicy()):
+            self.straggler = straggler
+    """
+    assert "SIM003" in codes(src)
+
+
+# --------------------------- CLI contract --------------------------- #
+def test_cli_src_repro_sweep_is_clean_and_writes_json(tmp_path):
+    out = tmp_path / "simlint.json"
+    proc = subprocess.run(
+        [sys.executable, "-m", "tools.simlint", "src/repro",
+         "--json", str(out)],
+        cwd=ROOT, capture_output=True, text=True)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    data = json.loads(out.read_text())
+    assert data["tool"] == "simlint"
+    assert data["summary"]["findings"] == 0
+    # every suppression that survives in-tree must say why
+    assert all(s.get("justification") for s in data["suppressed"])
+
+
+def test_cli_list_rules_names_all_codes():
+    proc = subprocess.run(
+        [sys.executable, "-m", "tools.simlint", "--list-rules"],
+        cwd=ROOT, capture_output=True, text=True)
+    assert proc.returncode == 0
+    for code in ("SIM001", "SIM002", "SIM003", "SIM004",
+                 "SIM005", "SIM006", "SIM007", "SIM008"):
+        assert code in proc.stdout
+
+
+def test_cli_select_unknown_code_is_usage_error():
+    proc = subprocess.run(
+        [sys.executable, "-m", "tools.simlint", "src/repro",
+         "--select", "SIM999"],
+        cwd=ROOT, capture_output=True, text=True)
+    assert proc.returncode == 2

@@ -1,0 +1,2 @@
+# Namespace package marker so `python -m tools.simlint` resolves. The
+# standalone scripts in this directory keep working as plain scripts.

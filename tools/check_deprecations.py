@@ -1,94 +1,44 @@
 #!/usr/bin/env python
-"""Deprecation lint (CI `docs` job, also run by tests/test_docs.py).
+"""Deprecation lint — thin shim over simlint rule SIM007.
 
-The ISSUE 6 API redesign keeps the old `SimCluster` flat kwargs and
-`recover(hardware=, ...)` keywords working through shims — for DOWNSTREAM
-users. Repo-internal code (src/, tests/, benchmarks/, examples/) must use
-the new `ClusterConfig`/`FabricConfig`/`FaultScript` surface, or CI fails
-here. Back-compat tests that exercise the shims on purpose mark the call
-with a `# deprecated-ok` comment anywhere in the call's line span.
-
-Pure AST scan: no imports, no execution, works on files that need optional
-deps. Exit code 0 = clean; nonzero prints every offending call site.
+The AST scan for internal callers of the legacy `SimCluster` flat kwargs
+/ `recover(hardware=, ...)` shims now lives in
+`tools/simlint/rules/deprecations.py` (rule SIM007), so it shares the
+engine's pragma handling, JSON output, and fixtures. This wrapper keeps
+the old entry point (`python tools/check_deprecations.py`) and exit
+semantics for scripts and muscle memory; `tools/lint_all.py` runs the
+full simlint engine instead. Suppress intentional shim usage with
+`# simlint: disable=SIM007 -- reason` (the legacy `# deprecated-ok:
+reason` spelling still works, with a nag).
 """
 from __future__ import annotations
 
-import ast
 import sys
 from pathlib import Path
 
 ROOT = Path(__file__).resolve().parent.parent
 SCAN_DIRS = ("src", "tests", "benchmarks", "examples", "tools")
-PRAGMA = "deprecated-ok"
-
-LEGACY_CLUSTER_KWARGS = {
-    "dp", "global_batch", "seq_len", "dataset_size", "hp", "ckpt_dir",
-    "full_every", "seed", "link_bw", "quantum", "t_iter_model", "topology",
-    "edge_bw", "pods", "dcn_bw", "ici_latency", "dcn_latency", "compile_plan",
-}
-LEGACY_RECOVER_KWARGS = {"hardware", "interrupt_after_chunks",
-                         "corrupt_chunks"}
-
-
-def _call_name(node: ast.Call) -> str | None:
-    fn = node.func
-    if isinstance(fn, ast.Attribute):
-        return fn.attr
-    if isinstance(fn, ast.Name):
-        return fn.id
-    return None
-
-
-def check_file(path: Path) -> list[str]:
-    src = path.read_text()
-    lines = src.splitlines()
-    try:
-        tree = ast.parse(src)
-    except SyntaxError as e:
-        return [f"{path.relative_to(ROOT)}: unparseable ({e})"]
-    errors = []
-    for node in ast.walk(tree):
-        if not isinstance(node, ast.Call):
-            continue
-        name = _call_name(node)
-        kwnames = {k.arg for k in node.keywords if k.arg}
-        bad = None
-        if name == "SimCluster" and kwnames & LEGACY_CLUSTER_KWARGS:
-            bad = (f"SimCluster({sorted(kwnames & LEGACY_CLUSTER_KWARGS)}"
-                   ") — use cluster=ClusterConfig(...) / "
-                   "fabric=FabricConfig(...)")
-        elif name == "from_kwargs" and isinstance(node.func, ast.Attribute):
-            bad = "SimCluster.from_kwargs(...) — deprecated shim"
-        elif name == "recover" and isinstance(node.func, ast.Attribute) \
-                and kwnames & LEGACY_RECOVER_KWARGS:
-            bad = (f"recover({sorted(kwnames & LEGACY_RECOVER_KWARGS)}"
-                   ") — use faults=FaultScript(...)")
-        if bad is None:
-            continue
-        span = range(node.lineno, (node.end_lineno or node.lineno) + 1)
-        if any(PRAGMA in lines[i - 1] for i in span if i - 1 < len(lines)):
-            continue
-        errors.append(f"{path.relative_to(ROOT)}:{node.lineno}: "
-                      f"deprecated call: {bad}")
-    return errors
 
 
 def main() -> int:
-    errors: list[str] = []
-    n_files = 0
-    for d in SCAN_DIRS:
-        base = ROOT / d
-        if not base.exists():
-            continue
-        for path in sorted(base.rglob("*.py")):
-            n_files += 1
-            errors.extend(check_file(path))
-    for e in errors:
-        print(f"FAIL: {e}")
-    if not errors:
-        print(f"deprecations OK: {n_files} files scanned, no internal "
-              "callers of the shimmed kwarg forms")
-    return 1 if errors else 0
+    sys.path.insert(0, str(ROOT))
+    from tools.simlint.engine import run
+    from tools.simlint.rules.deprecations import DeprecatedKwargsRule
+
+    paths = [d for d in SCAN_DIRS if (ROOT / d).exists()]
+    report = run(paths, [DeprecatedKwargsRule()])
+    findings = [f for f in report.findings if f.code == "SIM007"]
+    for f in findings:
+        print(f"FAIL: {f.path}:{f.line}: deprecated call: {f.message}")
+    if report.legacy_pragma_files:
+        print("note: legacy `# deprecated-ok` pragma(s) in "
+              f"{', '.join(report.legacy_pragma_files)} — prefer "
+              "`# simlint: disable=SIM007 -- reason`", file=sys.stderr)
+    if not findings:
+        print(f"deprecations OK: {report.n_files} files scanned, no "
+              "internal callers of the shimmed kwarg forms "
+              f"({len(report.suppressed)} suppressed)")
+    return 1 if findings else 0
 
 
 if __name__ == "__main__":

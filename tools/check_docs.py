@@ -10,9 +10,10 @@ Two guarantees, so the docs can't silently rot:
    importable (spec-resolvable) without running it.
 2. Every package under src/repro/ is mentioned in the README module map
    (as `repro/<name>`), so the map stays complete as the codebase grows.
-3. The public API surface (`repro.__all__`) matches the PINNED list below
-   and every pinned name resolves — the export list, the README quickstart
-   and this checker fail together or not at all.
+3. The public API surface (`repro.__all__`) matches the pinned list in
+   `tools/simlint/rules/api_pin.py` (rule SIM008) and every pinned name
+   resolves — the export list, the README quickstart and this checker
+   fail together or not at all.
 
 Exit code 0 = clean; nonzero prints every failure.
 """
@@ -24,32 +25,13 @@ import sys
 from pathlib import Path
 
 ROOT = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(ROOT))
 
-# The pinned public API (ISSUE 6): `repro.__all__` must equal this set and
-# every name must resolve. Changing the surface means changing THIS list,
-# the README quickstart, and `src/repro/__init__.py` together.
-PUBLIC_API = (
-    "SimCluster",
-    "ClusterConfig",
-    "FabricConfig",
-    "FaultScript",
-    "RecoveryPolicy",
-    "RecoveryPlan",
-    "RecoveryReport",
-    "RecoveryError",
-    "StreamRecovery",
-    "ComputeRecovery",
-    "HybridRecovery",
-    "fftrainer_timeline",
-    "baseline_timeline",
-    "compute_recovery_timeline",
-    "PodFabric",
-    "TrafficPlan",
-    "compile_traffic_plan",
-    "ReliabilityConfig",
-    "Scenario",
-    "run_scenario",
-)
+# The pinned public API (ISSUE 6) is single-sourced in simlint's SIM008
+# rule, which statically checks `repro.__all__`/`_EXPORTS`/README against
+# it. This checker adds the DYNAMIC half: every pinned name must actually
+# resolve through the lazy importer.
+from tools.simlint.rules.api_pin import PUBLIC_API  # noqa: E402
 
 FENCE = re.compile(r"```(\w+)?\n(.*?)```", re.DOTALL)
 IMPORT = re.compile(r"^\s*(?:import\s+repro|from\s+repro[\w.]*\s+import)\s",
@@ -134,7 +116,7 @@ def check_public_api() -> list[str]:
                       "repro.__all__")
     for name in sorted(declared - pinned):
         errors.append(f"public API: repro.__all__ exports {name} but it is "
-                      "not pinned in tools/check_docs.py")
+                      "not pinned in tools/simlint/rules/api_pin.py")
     for name in sorted(declared & pinned):
         try:
             getattr(repro, name)

@@ -1,14 +1,20 @@
 """Run every repo lint with one command.
 
-Wraps the checks the ci `docs` job runs — docs snippets / module map /
-public-API pin (`tools/check_docs.py`) and the internal legacy-kwarg ban
-(`tools/check_deprecations.py`) — each in its own interpreter with
-PYTHONPATH=src set for you, prints a PASS/FAIL summary, and exits with the
-worst status. Use it locally before pushing instead of remembering the
-individual tools:
+Wraps the checks the CI `lint` job runs — simlint (determinism /
+exactness invariants + the legacy-kwarg ban, `python -m tools.simlint`),
+docs snippets / module map / public-API resolution (`tools/check_docs.py`)
+and the type-error baseline (`tools/type_baseline.py`). Every lint runs
+to completion even when an earlier one fails; output is streamed under a
+per-lint header and the summary aggregates each exit code, so one broken
+lint can never mask findings from the others. Exits with the worst
+status.
 
-    python tools/lint_all.py            # all lints
-    python tools/lint_all.py --list     # show what would run
+    python tools/lint_all.py                     # all lints
+    python tools/lint_all.py --list              # show what would run
+    python tools/lint_all.py --artifacts DIR     # also write simlint.json
+
+Append new repo lints to LINTS and the CI lint job picks them up
+automatically.
 """
 from __future__ import annotations
 
@@ -17,28 +23,42 @@ import os
 import subprocess
 import sys
 from pathlib import Path
-from typing import Optional, Sequence, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 REPO = Path(__file__).resolve().parents[1]
 
-# (label, argv relative to the repo root) — append new repo lints here and
-# the ci docs job picks them up automatically
+# (label, argv relative to the repo root). simlint subsumes the old
+# standalone check_deprecations walk (SIM007 is one of its rules), so the
+# shim script is not listed here — running it twice would be redundant.
 LINTS: Tuple[Tuple[str, Tuple[str, ...]], ...] = (
+    ("simlint", ("-m", "tools.simlint")),
     ("check_docs", ("tools/check_docs.py",)),
-    ("check_deprecations", ("tools/check_deprecations.py",)),
+    ("type_baseline", ("tools/type_baseline.py",)),
 )
 
 
-def run_all() -> int:
+def run_all(artifacts: Optional[Path] = None) -> int:
     env = dict(os.environ)
-    env["PYTHONPATH"] = str(REPO / "src")
+    env["PYTHONPATH"] = str(REPO / "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
     worst = 0
-    results = []
+    results: List[Tuple[str, int]] = []
     for label, argv in LINTS:
-        proc = subprocess.run([sys.executable, *argv], cwd=REPO, env=env)
-        results.append((label, proc.returncode))
-        worst = max(worst, proc.returncode)
-    print("\nlint_all summary:")
+        argv = list(argv)
+        if label == "simlint" and artifacts is not None:
+            artifacts.mkdir(parents=True, exist_ok=True)
+            argv += ["--json", str(artifacts / "simlint.json")]
+        print(f"=== {label}: {' '.join(argv)} ===", flush=True)
+        try:
+            proc = subprocess.run([sys.executable, *argv], cwd=REPO, env=env)
+            rc = proc.returncode
+        except OSError as e:         # keep going: a lint that cannot even
+            print(f"lint_all: failed to launch {label}: {e}")
+            rc = 2                   # start must not hide the others
+        results.append((label, rc))
+        worst = max(worst, rc)
+        print(flush=True)
+    print("lint_all summary:")
     for label, rc in results:
         print(f"  {'PASS' if rc == 0 else f'FAIL (exit {rc})'}  {label}")
     return worst
@@ -48,12 +68,15 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--list", action="store_true",
                     help="list the lints without running them")
+    ap.add_argument("--artifacts", metavar="DIR", default=None,
+                    help="directory for machine-readable findings "
+                         "(simlint.json) for CI upload")
     args = ap.parse_args(argv)
     if args.list:
         for label, lint_argv in LINTS:
             print(f"{label}: {' '.join(lint_argv)}")
         return 0
-    return run_all()
+    return run_all(Path(args.artifacts) if args.artifacts else None)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,14 @@
+"""simlint — flow-aware static analysis for the simulator's determinism
+and exactness invariants. See docs/simlint.md for the rule catalog.
+
+Programmatic entry points:
+
+    from tools.simlint import run, default_rules, lint_text
+    report = run(["src/repro"], default_rules())
+"""
+from tools.simlint.engine import (Finding, Pragma, Report, Rule, lint_text,
+                                  run)
+from tools.simlint.rules import default_rules
+
+__all__ = ["Finding", "Pragma", "Report", "Rule", "default_rules",
+           "lint_text", "run"]

@@ -1,0 +1,79 @@
+"""CLI: `python -m tools.simlint [paths...] [--json out] [--select codes]`.
+
+Exit 0 = no unsuppressed findings; exit 1 = findings (each printed as
+`path:line:col: CODE message`); exit 2 = usage error. Run from the repo
+root (paths are repo-relative). Default paths cover everything the CI
+lint lane checks.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+from tools.simlint.engine import ROOT, run
+from tools.simlint.rules import default_rules
+
+DEFAULT_PATHS = ("src", "tests", "benchmarks", "examples", "tools")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m tools.simlint",
+        description="flow-aware determinism lint for the FFTrainer repro")
+    ap.add_argument("paths", nargs="*", default=list(DEFAULT_PATHS),
+                    help="files/dirs relative to the repo root "
+                         f"(default: {' '.join(DEFAULT_PATHS)})")
+    ap.add_argument("--json", metavar="FILE", default=None,
+                    help="also write the full report (findings + "
+                         "suppressions) as JSON")
+    ap.add_argument("--select", metavar="CODES", default=None,
+                    help="comma-separated rule codes to run "
+                         "(e.g. SIM001,SIM004)")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print the rule catalog and exit")
+    args = ap.parse_args(argv)
+
+    rules = default_rules()
+    if args.list_rules:
+        for r in rules:
+            print(f"{r.code}  {r.name}: {r.description}")
+        return 0
+    if args.select:
+        wanted = {c.strip().upper() for c in args.select.split(",")}
+        unknown = wanted - {r.code for r in rules}
+        if unknown:
+            print(f"simlint: unknown rule code(s): {sorted(unknown)}",
+                  file=sys.stderr)
+            return 2
+        rules = [r for r in rules if r.code in wanted]
+
+    # drop default paths that don't exist in this checkout (e.g. examples/)
+    paths = [p for p in args.paths
+             if (ROOT / p).exists() or Path(p).exists()]
+    if not paths:
+        print("simlint: no paths to scan", file=sys.stderr)
+        return 2
+    report = run(paths, rules)
+
+    for f in report.parse_errors + report.findings:
+        print(f.format())
+    if report.legacy_pragma_files:
+        print("simlint: note: legacy `# deprecated-ok` pragma(s) in "
+              f"{', '.join(report.legacy_pragma_files)} — prefer "
+              "`# simlint: disable=SIM007 -- reason`", file=sys.stderr)
+    if args.json:
+        out = Path(args.json)
+        out.parent.mkdir(parents=True, exist_ok=True)
+        out.write_text(json.dumps(report.to_dict(), indent=2) + "\n")
+    status = "FAIL" if report.failed else "OK"
+    print(f"simlint {status}: {report.n_files} files, "
+          f"{len(report.findings)} finding(s), "
+          f"{len(report.suppressed)} suppressed, "
+          f"{len(report.parse_errors)} parse error(s)")
+    return 1 if report.failed else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,219 @@
+"""Lightweight flow/type analyses shared by the simlint rules.
+
+Nothing here executes code: everything is a conservative approximation
+over the AST, tuned for the idioms this repo actually uses (annotated
+`self.x: Dict[...] = {}` attributes, small imperative methods). The two
+entry points:
+
+* `every_path_reaches` — statement-level path analysis: from a given
+  statement, does EVERY execution path to function exit pass a matching
+  call? (SIM004's topology-mutation/`_bump_epoch` contract.)
+* `ContainerKinds` — per-function set/dict typing from annotations and
+  constructor assignments (SIM006's unordered-iteration check).
+"""
+from __future__ import annotations
+
+import ast
+import re
+from typing import Callable, Dict, Iterable, List, Optional, Sequence, Tuple
+
+StmtSeq = Tuple[ast.stmt, ...]
+Frames = Tuple[StmtSeq, ...]
+
+
+# --------------------------------------------------------------------------- #
+# Path analysis (SIM004)
+# --------------------------------------------------------------------------- #
+def stmt_contains_call(stmt: ast.AST, match: Callable[[ast.Call], bool]
+                       ) -> bool:
+    return any(isinstance(n, ast.Call) and match(n)
+               for n in ast.walk(stmt))
+
+
+def _all_paths_call(frames: Frames, match: Callable[[ast.Call], bool]
+                    ) -> bool:
+    """True iff every path through the remaining statements (`frames` is a
+    stack of statement sequences, innermost first) contains a matching
+    call before the function exits normally. `return` exits without one;
+    `raise` is treated as an exit too (the mutation already happened, so
+    an exceptional exit with a stale epoch is still a violation). Loops
+    are assumed skippable (0 iterations), so a call inside a loop body
+    never satisfies the requirement on its own."""
+    if not frames:
+        return False                    # fell off the end: no call seen
+    head, rest = frames[0], frames[1:]
+    if not head:
+        return _all_paths_call(rest, match)
+    s, tail = head[0], tuple(head[1:])
+    cont: Frames = (tail,) + rest
+    if isinstance(s, (ast.Return, ast.Raise, ast.Continue, ast.Break)):
+        # a matching call in the returned expression still counts
+        return stmt_contains_call(s, match)
+    if isinstance(s, ast.If):
+        return (_all_paths_call((tuple(s.body),) + cont, match)
+                and _all_paths_call((tuple(s.orelse),) + cont, match))
+    if isinstance(s, (ast.For, ast.AsyncFor, ast.While)):
+        # body may run zero times: only the continuation counts
+        return _all_paths_call(cont, match)
+    if isinstance(s, (ast.With, ast.AsyncWith)):
+        return _all_paths_call((tuple(s.body),) + cont, match)
+    if isinstance(s, ast.Try):
+        # conservative: the happy path is body -> orelse -> finally; a
+        # handler path must ALSO reach the call (or re-raise) on its own
+        happy = tuple(s.body) + tuple(s.orelse) + tuple(s.finalbody)
+        if not _all_paths_call((happy,) + cont, match):
+            return False
+        for h in s.handlers:
+            hpath = tuple(h.body) + tuple(s.finalbody)
+            if not _all_paths_call((hpath,) + cont, match):
+                return False
+        return True
+    if isinstance(s, ast.Match):
+        return all(_all_paths_call((tuple(c.body),) + cont, match)
+                   for c in s.cases) and bool(s.cases)
+    # simple statement: a matching call anywhere in it covers all paths
+    if stmt_contains_call(s, match):
+        return True
+    return _all_paths_call(cont, match)
+
+
+def walk_with_continuations(body: Sequence[ast.stmt], frames: Frames = ()
+                            ) -> Iterable[Tuple[ast.stmt, Frames]]:
+    """Yield every statement in `body` (recursively) together with the
+    continuation frames that follow it — what executes after the
+    statement completes, innermost sequence first."""
+    for i, s in enumerate(body):
+        cont: Frames = (tuple(body[i + 1:]),) + frames
+        yield s, cont
+        if isinstance(s, ast.If):
+            yield from walk_with_continuations(s.body, cont)
+            yield from walk_with_continuations(s.orelse, cont)
+        elif isinstance(s, (ast.For, ast.AsyncFor, ast.While)):
+            yield from walk_with_continuations(s.body, cont)
+            yield from walk_with_continuations(s.orelse, cont)
+        elif isinstance(s, (ast.With, ast.AsyncWith)):
+            yield from walk_with_continuations(s.body, cont)
+        elif isinstance(s, ast.Try):
+            after_body: Frames = ((tuple(s.orelse) + tuple(s.finalbody)),) \
+                + cont
+            yield from walk_with_continuations(s.body, after_body)
+            for h in s.handlers:
+                yield from walk_with_continuations(
+                    h.body, (tuple(s.finalbody),) + cont)
+            yield from walk_with_continuations(s.orelse,
+                                               (tuple(s.finalbody),) + cont)
+            yield from walk_with_continuations(s.finalbody, cont)
+        elif isinstance(s, ast.Match):
+            for c in s.cases:
+                yield from walk_with_continuations(c.body, cont)
+
+
+def every_path_reaches(stmt: ast.stmt, cont: Frames,
+                       match: Callable[[ast.Call], bool]) -> bool:
+    """Does every path from (and including) `stmt` to function exit pass a
+    matching call? `cont` comes from `walk_with_continuations`."""
+    if stmt_contains_call(stmt, match):
+        return True
+    return _all_paths_call(cont, match)
+
+
+# --------------------------------------------------------------------------- #
+# Container-kind inference (SIM006)
+# --------------------------------------------------------------------------- #
+_SET_ANN = re.compile(r"\b(?:set|Set|AbstractSet|frozenset|FrozenSet)\b")
+_DICT_ANN = re.compile(
+    r"\b(?:dict|Dict|defaultdict|DefaultDict|OrderedDict|Counter|Mapping|"
+    r"MutableMapping)\b")
+_SET_METHODS = {"intersection", "union", "difference",
+                "symmetric_difference"}
+
+
+def _ann_kind(ann: Optional[ast.expr]) -> Optional[str]:
+    if ann is None:
+        return None
+    text = ast.unparse(ann)
+    if _SET_ANN.search(text):
+        return "set"
+    if _DICT_ANN.search(text):
+        return "dict"
+    return None
+
+
+def _key_of(target: ast.expr) -> Optional[str]:
+    """Binding key for a Name (`x`) or a self attribute (`self.x`)."""
+    if isinstance(target, ast.Name):
+        return target.id
+    if isinstance(target, ast.Attribute) and \
+            isinstance(target.value, ast.Name) and target.value.id == "self":
+        return f"self.{target.attr}"
+    return None
+
+
+class ContainerKinds:
+    """name / "self.attr" -> "set" | "dict", inferred from annotations and
+    literal/constructor assignments over a class body + one function."""
+
+    def __init__(self, func: ast.AST,
+                 enclosing_class: Optional[ast.ClassDef] = None):
+        self.kinds: Dict[str, str] = {}
+        if enclosing_class is not None:
+            for node in ast.walk(enclosing_class):
+                self._learn(node)
+        for node in ast.walk(func):
+            self._learn(node)
+
+    def _learn(self, node: ast.AST) -> None:
+        if isinstance(node, ast.arg) and node.annotation is not None:
+            kind = _ann_kind(node.annotation)
+            if kind and node.arg not in self.kinds:
+                self.kinds[node.arg] = kind
+        elif isinstance(node, ast.AnnAssign):
+            key = _key_of(node.target)
+            kind = _ann_kind(node.annotation)
+            if key and kind:
+                self.kinds[key] = kind
+        elif isinstance(node, ast.Assign) and len(node.targets) == 1:
+            key = _key_of(node.targets[0])
+            kind = self.expr_kind(node.value, learning=True)
+            if key and kind and key not in self.kinds:
+                self.kinds[key] = kind
+
+    def expr_kind(self, expr: ast.expr, learning: bool = False
+                  ) -> Optional[str]:
+        """The container kind of `expr`, or None if unknown/ordered.
+        `sorted(...)`/`list(...)`/`tuple(...)` wrappers return None — they
+        impose an order, which is the approved escape hatch."""
+        if isinstance(expr, (ast.Set, ast.SetComp)):
+            return "set"
+        if isinstance(expr, (ast.Dict, ast.DictComp)):
+            return "dict"
+        if isinstance(expr, ast.BinOp) and isinstance(
+                expr.op, (ast.BitOr, ast.BitAnd, ast.Sub, ast.BitXor)):
+            left = self.expr_kind(expr.left)
+            right = self.expr_kind(expr.right)
+            if "set" in (left, right):
+                return "set"
+            return None
+        if isinstance(expr, ast.Call):
+            fn = expr.func
+            if isinstance(fn, ast.Name):
+                if fn.id in ("set", "frozenset"):
+                    return "set"
+                if fn.id in ("dict", "defaultdict", "Counter",
+                             "OrderedDict"):
+                    return "dict"
+                return None
+            if isinstance(fn, ast.Attribute):
+                if fn.attr in _SET_METHODS:
+                    return "set"
+                if fn.attr in ("keys", "values", "items") and not learning:
+                    # view over a known dict: unordered for our purposes
+                    return "dict" if self.expr_kind(fn.value) == "dict" \
+                        else None
+                if fn.attr == "copy":
+                    return self.expr_kind(fn.value)
+            return None
+        key = _key_of(expr)
+        if key is not None:
+            return self.kinds.get(key)
+        return None

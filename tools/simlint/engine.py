@@ -1,0 +1,330 @@
+"""simlint engine: file collection, pragma parsing, rule registry, output.
+
+The simulator's headline results only hold because the fabric clock is
+exact and replays are bit-identical. Those invariants are easy to violate
+with one innocuous line (`time.monotonic()` in a heartbeat, a shared
+mutable default policy — both shipped in PR 7 and had to be hand-fixed),
+so they are enforced here as a machine-checked contract: an AST +
+lightweight-dataflow analysis with one rule per invariant, run over
+`src/repro` in CI (`tools/lint_all.py`).
+
+Suppression pragmas (per line, justification REQUIRED):
+
+    something_suspicious()   # simlint: disable=SIM001 -- host-side CLI timer
+
+A pragma may also sit alone on the line directly above the finding, or on
+any line of a multi-line statement's span. A pragma without a
+justification (`-- reason`) is itself a finding (SIM000). The legacy
+`# deprecated-ok: reason` spelling is honored as `disable=SIM007` and
+warns once per run.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import io
+import json
+import re
+import sys
+import tokenize
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+ROOT = Path(__file__).resolve().parents[2]
+
+PRAGMA_RE = re.compile(
+    r"#\s*simlint:\s*disable=([A-Z]{3}\d{3}(?:\s*,\s*[A-Z]{3}\d{3})*)"
+    r"(?:\s+--\s*(.*\S))?\s*$")
+LEGACY_PRAGMA_RE = re.compile(r"#\s*deprecated-ok\b:?\s*(.*\S)?\s*$")
+PRAGMA_ONLY_LINE_RE = re.compile(r"^\s*#")
+
+
+def scan_pragmas(source: str) -> Dict[int, "Pragma"]:
+    """Pragmas by line, from REAL comment tokens only — a docstring that
+    talks about `# simlint: disable=...` is not a suppression."""
+    out: Dict[int, Pragma] = {}
+    try:
+        tokens = tokenize.generate_tokens(io.StringIO(source).readline)
+        for tok in tokens:
+            if tok.type != tokenize.COMMENT:
+                continue
+            i = tok.start[0]
+            m = PRAGMA_RE.search(tok.string)
+            if m:
+                codes = tuple(c.strip() for c in m.group(1).split(","))
+                out[i] = Pragma(i, codes, m.group(2), legacy=False)
+                continue
+            m = LEGACY_PRAGMA_RE.search(tok.string)
+            if m:
+                out[i] = Pragma(i, ("SIM007",), m.group(1), legacy=True)
+    except tokenize.TokenError:
+        pass                    # unparseable files are reported via SIM000
+    return out
+
+
+@dataclass(frozen=True)
+class Finding:
+    """One rule violation, anchored to a source location."""
+    code: str                  # e.g. "SIM001"
+    path: str                  # repo-relative posix path
+    line: int                  # 1-indexed
+    col: int                   # 0-indexed (ast convention)
+    message: str
+    justification: Optional[str] = None   # set when suppressed
+
+    def format(self) -> str:
+        return f"{self.path}:{self.line}:{self.col}: {self.code} {self.message}"
+
+    def to_dict(self) -> Dict:
+        d = dataclasses.asdict(self)
+        if self.justification is None:
+            d.pop("justification")
+        return d
+
+
+@dataclass(frozen=True)
+class Pragma:
+    line: int
+    codes: Tuple[str, ...]
+    justification: Optional[str]
+    legacy: bool
+
+
+@dataclass
+class FileCtx:
+    """One parsed source file plus its suppression pragmas."""
+    path: Path
+    rel: str
+    source: str
+    lines: List[str]
+    tree: ast.AST
+    pragmas: Dict[int, Pragma] = field(default_factory=dict)
+
+    @classmethod
+    def parse(cls, path: Path, rel: str) -> "FileCtx":
+        source = path.read_text()
+        tree = ast.parse(source, filename=str(path))
+        ctx = cls(path, rel, source, source.splitlines(), tree)
+        ctx.pragmas = scan_pragmas(source)
+        return ctx
+
+    def pragma_for(self, code: str, span: Tuple[int, int]) -> Optional[Pragma]:
+        """The pragma suppressing `code` over line span [start, end]: on any
+        line of the span, or in the contiguous comment block just above
+        (so a pragma's justification may continue over several comment
+        lines)."""
+        start, end = span
+        for i in range(start, end + 1):
+            p = self.pragmas.get(i)
+            if p and code in p.codes:
+                return p
+        i = start - 1
+        while 0 < i <= len(self.lines) and \
+                PRAGMA_ONLY_LINE_RE.match(self.lines[i - 1]):
+            p = self.pragmas.get(i)
+            if p and code in p.codes:
+                return p
+            i -= 1
+        return None
+
+
+@dataclass
+class Project:
+    """Cross-file context shared by all rules in one run."""
+    root: Path
+    files: List[FileCtx]
+    # class name -> frozen? for every @dataclass seen in the scanned files
+    # (SIM003 flags defaults that construct a non-frozen dataclass)
+    dataclasses_frozen: Dict[str, bool] = field(default_factory=dict)
+
+
+class Rule:
+    """One invariant. Subclasses set `code`/`name`/`description` and
+    implement `check` (per file) and/or `check_project` (once per run);
+    `applies` scopes the rule to repo-relative path prefixes."""
+    code: str = "SIM000"
+    name: str = "base"
+    description: str = ""
+
+    def applies(self, rel: str) -> bool:
+        return True
+
+    def check(self, ctx: FileCtx, project: Project) -> Iterable[Finding]:
+        return ()
+
+    def check_project(self, project: Project) -> Iterable[Finding]:
+        return ()
+
+    # Span the suppression pragma is honored over; rules that anchor a
+    # finding inside a multi-line statement pass the statement node.
+    @staticmethod
+    def span(node: ast.AST) -> Tuple[int, int]:
+        return (node.lineno, getattr(node, "end_lineno", node.lineno)
+                or node.lineno)
+
+
+def _scan_dataclasses(files: Sequence[FileCtx]) -> Dict[str, bool]:
+    """Project pre-pass: every @dataclass class name -> frozen flag."""
+    out: Dict[str, bool] = {}
+    for ctx in files:
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.ClassDef):
+                continue
+            for dec in node.decorator_list:
+                target = dec.func if isinstance(dec, ast.Call) else dec
+                dname = target.attr if isinstance(target, ast.Attribute) \
+                    else getattr(target, "id", None)
+                if dname != "dataclass":
+                    continue
+                frozen = False
+                if isinstance(dec, ast.Call):
+                    for kw in dec.keywords:
+                        if kw.arg == "frozen" and \
+                                isinstance(kw.value, ast.Constant):
+                            frozen = bool(kw.value.value)
+                out[node.name] = frozen
+    return out
+
+
+def collect_files(paths: Sequence[str], root: Path = ROOT) -> List[Path]:
+    out: List[Path] = []
+    for p in paths:
+        base = (root / p) if not Path(p).is_absolute() else Path(p)
+        if base.is_file() and base.suffix == ".py":
+            out.append(base)
+        elif base.is_dir():
+            out.extend(sorted(f for f in base.rglob("*.py")
+                              if "__pycache__" not in f.parts))
+        else:
+            raise FileNotFoundError(f"simlint: no such path: {p}")
+    seen: Set[Path] = set()
+    uniq = []
+    for f in out:
+        if f not in seen:
+            seen.add(f)
+            uniq.append(f)
+    return uniq
+
+
+@dataclass
+class Report:
+    findings: List[Finding]
+    suppressed: List[Finding]
+    parse_errors: List[Finding]
+    n_files: int
+    legacy_pragma_files: List[str]
+
+    @property
+    def failed(self) -> bool:
+        return bool(self.findings or self.parse_errors)
+
+    def to_dict(self) -> Dict:
+        return {
+            "tool": "simlint",
+            "files_scanned": self.n_files,
+            "findings": [f.to_dict() for f in self.findings],
+            "suppressed": [f.to_dict() for f in self.suppressed],
+            "parse_errors": [f.to_dict() for f in self.parse_errors],
+            "summary": {"findings": len(self.findings),
+                        "suppressed": len(self.suppressed),
+                        "parse_errors": len(self.parse_errors)},
+        }
+
+
+def run(paths: Sequence[str], rules: Sequence[Rule],
+        root: Path = ROOT) -> Report:
+    """Lint `paths` (files or directories, relative to `root`) with
+    `rules`, applying suppression pragmas. Findings keep source order."""
+    parse_errors: List[Finding] = []
+    files: List[FileCtx] = []
+    for f in collect_files(paths, root):
+        rel = f.relative_to(root).as_posix() if f.is_relative_to(root) \
+            else f.as_posix()
+        try:
+            files.append(FileCtx.parse(f, rel))
+        except SyntaxError as e:
+            parse_errors.append(Finding("SIM000", rel, e.lineno or 1, 0,
+                                        f"unparseable: {e.msg}"))
+    project = Project(root=root, files=files,
+                      dataclasses_frozen=_scan_dataclasses(files))
+    raw: List[Tuple[Finding, Tuple[int, int], FileCtx]] = []
+    for rule in rules:
+        for ctx in files:
+            if not rule.applies(ctx.rel):
+                continue
+            for fnd in rule.check(ctx, project):
+                raw.append((fnd, getattr(fnd, "_span", None) or
+                            (fnd.line, fnd.line), ctx))
+        for fnd in rule.check_project(project):
+            raw.append((fnd, (fnd.line, fnd.line), None))
+
+    ctx_by_rel = {c.rel: c for c in files}
+    findings: List[Finding] = []
+    suppressed: List[Finding] = []
+    for fnd, span, ctx in raw:
+        ctx = ctx or ctx_by_rel.get(fnd.path)
+        pragma = ctx.pragma_for(fnd.code, span) if ctx else None
+        if pragma is None:
+            findings.append(fnd)
+        else:
+            suppressed.append(dataclasses.replace(
+                fnd, justification=pragma.justification or ""))
+
+    # every suppression must say why: a pragma with no `-- reason` is a
+    # finding in its own right (and legacy pragmas must carry trailing text)
+    for ctx in files:
+        findings.extend(justification_findings(ctx))
+
+    legacy = sorted({c.rel for c in files
+                     for p in c.pragmas.values() if p.legacy})
+    findings.sort(key=lambda f: (f.path, f.line, f.code))
+    suppressed.sort(key=lambda f: (f.path, f.line, f.code))
+    return Report(findings, suppressed, parse_errors, len(files), legacy)
+
+
+def lint_text(source: str, rel: str = "src/repro/_fixture_.py",
+              rules: Optional[Sequence[Rule]] = None) -> List[Finding]:
+    """Lint a source string as if it lived at repo path `rel` — the unit
+    of the fixture tests. Project context is built from this file alone."""
+    from tools.simlint.rules import default_rules
+    rules = list(rules) if rules is not None else default_rules()
+    tree = ast.parse(source)
+    ctx = FileCtx(Path("/fixture") / rel, rel, source,
+                  source.splitlines(), tree)
+    ctx.pragmas = scan_pragmas(source)
+    project = Project(root=ROOT, files=[ctx],
+                      dataclasses_frozen=_scan_dataclasses([ctx]))
+    out: List[Finding] = []
+    for rule in rules:
+        if not rule.applies(rel):
+            continue
+        for fnd in rule.check(ctx, project):
+            span = getattr(fnd, "_span", None) or (fnd.line, fnd.line)
+            if ctx.pragma_for(fnd.code, span) is None:
+                out.append(fnd)
+    out.extend(justification_findings(ctx))
+    out.sort(key=lambda f: (f.path, f.line, f.code))
+    return out
+
+
+def justification_findings(ctx: FileCtx) -> List[Finding]:
+    """SIM000 for every suppression pragma that doesn't say why."""
+    out: List[Finding] = []
+    for p in ctx.pragmas.values():
+        if p.justification:
+            continue
+        spelling = "# deprecated-ok" if p.legacy else \
+            f"# simlint: disable={','.join(p.codes)}"
+        out.append(Finding(
+            "SIM000", ctx.rel, p.line, 0,
+            f"suppression `{spelling}` has no justification — append "
+            "` -- <why this is safe>`"))
+    return out
+
+
+def attach_span(fnd: Finding, node: ast.AST) -> Finding:
+    """Anchor the pragma-matching span of `fnd` to `node`'s full line
+    range (for findings inside multi-line statements)."""
+    object.__setattr__(fnd, "_span", Rule.span(node))
+    return fnd

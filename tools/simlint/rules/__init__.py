@@ -1,0 +1,35 @@
+"""simlint rule registry.
+
+One module per invariant; `default_rules()` is the registry the CLI and
+the fixture tests run. Adding a rule = add a module with a `Rule`
+subclass, list it here, document it in docs/simlint.md.
+"""
+from __future__ import annotations
+
+from typing import List
+
+from tools.simlint.engine import Rule
+from tools.simlint.rules.wallclock import WallClockRule
+from tools.simlint.rules.randomness import UnseededRandomRule
+from tools.simlint.rules.mutable_defaults import MutableDefaultRule
+from tools.simlint.rules.epoch_bump import EpochBumpRule
+from tools.simlint.rules.float_eq import FloatClockEqRule
+from tools.simlint.rules.unordered_iter import UnorderedIterRule
+from tools.simlint.rules.deprecations import DeprecatedKwargsRule
+from tools.simlint.rules.api_pin import PublicApiPinRule
+
+
+def default_rules() -> List[Rule]:
+    return [
+        WallClockRule(),
+        UnseededRandomRule(),
+        MutableDefaultRule(),
+        EpochBumpRule(),
+        FloatClockEqRule(),
+        UnorderedIterRule(),
+        DeprecatedKwargsRule(),
+        PublicApiPinRule(),
+    ]
+
+
+__all__ = ["default_rules"]

@@ -1,0 +1,123 @@
+"""SIM008 — the pinned public API surface.
+
+Single source of truth for the `repro` export list (moved here from
+`tools/check_docs.py`, which now imports `PUBLIC_API` from this module).
+Statically parses `src/repro/__init__.py` — no imports, so it runs on a
+checkout without jax — and checks three things stay in lockstep:
+
+1. `__all__` equals the pin (both directions),
+2. `_EXPORTS` (the lazy-import table) covers exactly `__all__`,
+3. README.md mentions every pinned name.
+
+Changing the surface means changing the pin HERE, `repro/__init__.py`,
+and the README together — exactly the failure mode this makes loud.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterable, List, Optional
+
+from tools.simlint.engine import FileCtx, Finding, Project, Rule
+
+PUBLIC_API = (
+    "SimCluster",
+    "ClusterConfig",
+    "FabricConfig",
+    "FaultScript",
+    "RecoveryPolicy",
+    "RecoveryPlan",
+    "RecoveryReport",
+    "RecoveryError",
+    "StreamRecovery",
+    "ComputeRecovery",
+    "HybridRecovery",
+    "fftrainer_timeline",
+    "baseline_timeline",
+    "compute_recovery_timeline",
+    "PodFabric",
+    "TrafficPlan",
+    "compile_traffic_plan",
+    "ReliabilityConfig",
+    "Scenario",
+    "run_scenario",
+)
+
+INIT_REL = "src/repro/__init__.py"
+
+
+def _str_list(node: ast.expr) -> Optional[List[str]]:
+    if isinstance(node, (ast.List, ast.Tuple)) and all(
+            isinstance(e, ast.Constant) and isinstance(e.value, str)
+            for e in node.elts):
+        return [e.value for e in node.elts]
+    return None
+
+
+def _str_dict_keys(node: ast.expr) -> Optional[List[str]]:
+    if isinstance(node, ast.Dict) and all(
+            isinstance(k, ast.Constant) and isinstance(k.value, str)
+            for k in node.keys):
+        return [k.value for k in node.keys]
+    return None
+
+
+class PublicApiPinRule(Rule):
+    code = "SIM008"
+    name = "public-api-pin"
+    description = ("repro.__all__ / _EXPORTS drifted from the pinned "
+                   "public API (or README stopped mentioning a name)")
+
+    def applies(self, rel: str) -> bool:
+        return rel == INIT_REL
+
+    def check(self, ctx: FileCtx, project: Project) -> Iterable[Finding]:
+        all_names: Optional[List[str]] = None
+        exports: Optional[List[str]] = None
+        lineno: Dict[str, int] = {"__all__": 1, "_EXPORTS": 1}
+        for node in ctx.tree.body:
+            if isinstance(node, ast.Assign) and len(node.targets) == 1 and \
+                    isinstance(node.targets[0], ast.Name):
+                tname = node.targets[0].id
+                if tname == "__all__":
+                    all_names = _str_list(node.value)
+                    lineno["__all__"] = node.lineno
+                elif tname == "_EXPORTS":
+                    exports = _str_dict_keys(node.value)
+                    lineno["_EXPORTS"] = node.lineno
+
+        def fnd(key: str, msg: str) -> Finding:
+            return Finding(self.code, ctx.rel, lineno[key], 0, msg)
+
+        if all_names is None:
+            yield fnd("__all__", "could not statically read __all__ (must "
+                      "be a literal list of strings)")
+            return
+        declared, pinned = set(all_names), set(PUBLIC_API)
+        for name in sorted(pinned - declared):
+            yield fnd("__all__", f"public API: `{name}` is pinned "
+                      "(tools/simlint/rules/api_pin.py) but missing from "
+                      "repro.__all__")
+        for name in sorted(declared - pinned):
+            yield fnd("__all__", f"public API: repro.__all__ exports "
+                      f"`{name}` but it is not pinned in "
+                      "tools/simlint/rules/api_pin.py")
+        if exports is None:
+            yield fnd("_EXPORTS", "could not statically read _EXPORTS "
+                      "(must be a literal dict with string keys)")
+        else:
+            table = set(exports)
+            for name in sorted(declared - table):
+                yield fnd("_EXPORTS", f"public API: `{name}` is in "
+                          "__all__ but has no _EXPORTS entry — lazy "
+                          "import will AttributeError")
+            for name in sorted(table - declared):
+                yield fnd("_EXPORTS", f"public API: _EXPORTS maps "
+                          f"`{name}` which is not in __all__")
+        readme = project.root / "README.md"
+        if readme.exists():
+            text = readme.read_text()
+            for name in sorted(pinned):
+                if name not in text:
+                    yield fnd("__all__",
+                              f"public API: README.md never mentions "
+                              f"`{name}`")

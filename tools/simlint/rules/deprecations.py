@@ -1,0 +1,69 @@
+"""SIM007 — internal callers of the deprecated flat-kwargs API.
+
+Port of `tools/check_deprecations.py` into the simlint engine (that
+script is now a thin shim over this rule). The ISSUE 6 redesign keeps
+`SimCluster(dp=..., link_bw=...)` / `recover(hardware=...)` working for
+downstream users; repo-internal code must use
+`ClusterConfig`/`FabricConfig`/`FaultScript`. Back-compat tests that
+exercise the shims on purpose carry `# simlint: disable=SIM007 -- ...`
+(the legacy `# deprecated-ok: reason` spelling still works).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable, Optional
+
+from tools.simlint.engine import FileCtx, Finding, Project, Rule, attach_span
+
+LEGACY_CLUSTER_KWARGS = {
+    "dp", "global_batch", "seq_len", "dataset_size", "hp", "ckpt_dir",
+    "full_every", "seed", "link_bw", "quantum", "t_iter_model", "topology",
+    "edge_bw", "pods", "dcn_bw", "ici_latency", "dcn_latency", "compile_plan",
+}
+LEGACY_RECOVER_KWARGS = {"hardware", "interrupt_after_chunks",
+                         "corrupt_chunks"}
+SCAN_PREFIXES = ("src/", "tests/", "benchmarks/", "examples/", "tools/")
+
+
+def _call_name(node: ast.Call) -> Optional[str]:
+    fn = node.func
+    if isinstance(fn, ast.Attribute):
+        return fn.attr
+    if isinstance(fn, ast.Name):
+        return fn.id
+    return None
+
+
+class DeprecatedKwargsRule(Rule):
+    code = "SIM007"
+    name = "deprecated-kwargs"
+    description = ("internal caller of the shimmed legacy kwargs — use "
+                   "ClusterConfig/FabricConfig/FaultScript")
+
+    def applies(self, rel: str) -> bool:
+        return rel.startswith(SCAN_PREFIXES) and \
+            not rel.startswith("tools/simlint/")
+
+    def check(self, ctx: FileCtx, project: Project) -> Iterable[Finding]:
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            name = _call_name(node)
+            kwnames = {k.arg for k in node.keywords if k.arg}
+            bad = None
+            if name == "SimCluster" and kwnames & LEGACY_CLUSTER_KWARGS:
+                bad = (f"SimCluster({sorted(kwnames & LEGACY_CLUSTER_KWARGS)}"
+                       ") — use cluster=ClusterConfig(...) / "
+                       "fabric=FabricConfig(...)")
+            elif name == "from_kwargs" and \
+                    isinstance(node.func, ast.Attribute):
+                bad = "SimCluster.from_kwargs(...) — deprecated shim"
+            elif name == "recover" and isinstance(node.func, ast.Attribute) \
+                    and kwnames & LEGACY_RECOVER_KWARGS:
+                bad = (f"recover({sorted(kwnames & LEGACY_RECOVER_KWARGS)}"
+                       ") — use faults=FaultScript(...)")
+            if bad is None:
+                continue
+            yield attach_span(Finding(
+                self.code, ctx.rel, node.lineno, node.col_offset,
+                f"deprecated call: {bad}"), node)

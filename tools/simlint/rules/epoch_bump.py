@@ -1,0 +1,139 @@
+"""SIM004 — topology mutation without an epoch bump (flow-sensitive).
+
+Compiled `TrafficPlan`s (PR 6) are invalidated by `LinkTopology._epoch`:
+any method that mutates node/edge/bandwidth state MUST call
+`self._bump_epoch()` on every path to exit, or a stale plan replays
+traffic over a topology that no longer exists — silently wrong
+timings, no crash. This rule finds every mutation of tracked topology
+state inside a topology class and checks, path-by-path (if/else, loops
+as zero-iteration-possible, try/except, early returns), that a bump is
+unavoidable downstream.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable, Optional, Set
+
+from tools.simlint.engine import FileCtx, Finding, Project, Rule, attach_span
+from tools.simlint.dataflow import every_path_reaches, walk_with_continuations
+
+TOPOLOGY_CLASSES = {"LinkTopology", "PodFabric"}
+BUMP = "_bump_epoch"
+# instance attributes that participate in routing/plan compilation
+TRACKED = {"dark_nodes", "dark_edges", "links", "edge_tier", "nodes",
+           "edges"}
+SET_MUTATORS = {"add", "discard", "remove", "clear", "update", "pop",
+                "popitem", "setdefault", "difference_update",
+                "intersection_update", "symmetric_difference_update"}
+# methods where mutation is construction, not reconfiguration
+EXEMPT_METHODS = {"__init__", "__post_init__", "_init_fabric", BUMP}
+
+
+def _is_topology_class(cls: ast.ClassDef) -> bool:
+    if cls.name in TOPOLOGY_CLASSES:
+        return True
+    for b in cls.bases:
+        name = b.attr if isinstance(b, ast.Attribute) else \
+            getattr(b, "id", None)
+        if name in TOPOLOGY_CLASSES:
+            return True
+    # duck-typed: defines its own _bump_epoch contract
+    return any(isinstance(s, (ast.FunctionDef, ast.AsyncFunctionDef))
+               and s.name == BUMP for s in cls.body)
+
+
+def _self_tracked_attr(expr: ast.expr) -> Optional[str]:
+    """`self.<tracked>` -> attr name."""
+    if isinstance(expr, ast.Attribute) and \
+            isinstance(expr.value, ast.Name) and expr.value.id == "self" \
+            and expr.attr in TRACKED:
+        return expr.attr
+    return None
+
+
+def _derives_from_tracked(expr: ast.expr) -> bool:
+    """Does `expr` syntactically reach through self.<tracked> or
+    self.edge(...)/self.link(...)? Catches `self.links[k].bw = x` and
+    `self.edge(u, v).bw = x`."""
+    for n in ast.walk(expr):
+        if _self_tracked_attr(n) is not None:
+            return True
+        if isinstance(n, ast.Call) and isinstance(n.func, ast.Attribute) \
+                and isinstance(n.func.value, ast.Name) \
+                and n.func.value.id == "self" \
+                and n.func.attr in ("edge", "link", "get_edge"):
+            return True
+    return False
+
+
+def _mutation_reason(stmt: ast.stmt) -> Optional[str]:
+    """Reason string if `stmt` mutates tracked topology state."""
+    if isinstance(stmt, (ast.Assign, ast.AugAssign)):
+        targets = stmt.targets if isinstance(stmt, ast.Assign) \
+            else [stmt.target]
+        for t in targets:
+            attr = _self_tracked_attr(t)
+            if attr:
+                return f"rebinds self.{attr}"
+            if isinstance(t, ast.Subscript) and _derives_from_tracked(
+                    t.value):
+                return f"writes into {ast.unparse(t.value)}[...]"
+            if isinstance(t, ast.Attribute) and \
+                    t.attr in ("bw", "bandwidth", "latency", "tier") and \
+                    _derives_from_tracked(t.value):
+                return f"sets .{t.attr} on a tracked edge"
+    elif isinstance(stmt, ast.Delete):
+        for t in stmt.targets:
+            if _self_tracked_attr(t) or (
+                    isinstance(t, ast.Subscript)
+                    and _derives_from_tracked(t.value)):
+                return f"deletes {ast.unparse(t)}"
+    elif isinstance(stmt, ast.Expr) and isinstance(stmt.value, ast.Call):
+        fn = stmt.value.func
+        if isinstance(fn, ast.Attribute) and fn.attr in SET_MUTATORS:
+            attr = _self_tracked_attr(fn.value)
+            if attr:
+                return f"self.{attr}.{fn.attr}(...)"
+    return None
+
+
+def _is_bump_call(call: ast.Call) -> bool:
+    fn = call.func
+    return isinstance(fn, ast.Attribute) and fn.attr == BUMP and \
+        isinstance(fn.value, ast.Name) and fn.value.id == "self"
+
+
+class EpochBumpRule(Rule):
+    code = "SIM004"
+    name = "epoch-bump"
+    description = ("topology mutation with a path to exit that skips "
+                   "self._bump_epoch() — compiled TrafficPlans go stale "
+                   "silently")
+
+    def applies(self, rel: str) -> bool:
+        return rel.startswith("src/repro/")
+
+    def check(self, ctx: FileCtx, project: Project) -> Iterable[Finding]:
+        for cls in ast.walk(ctx.tree):
+            if not isinstance(cls, ast.ClassDef) or \
+                    not _is_topology_class(cls):
+                continue
+            for fn in cls.body:
+                if not isinstance(fn, (ast.FunctionDef,
+                                       ast.AsyncFunctionDef)):
+                    continue
+                if fn.name in EXEMPT_METHODS:
+                    continue
+                reported: Set[int] = set()
+                for stmt, cont in walk_with_continuations(fn.body):
+                    reason = _mutation_reason(stmt)
+                    if reason is None or stmt.lineno in reported:
+                        continue
+                    if every_path_reaches(stmt, cont, _is_bump_call):
+                        continue
+                    reported.add(stmt.lineno)
+                    yield attach_span(Finding(
+                        self.code, ctx.rel, stmt.lineno, stmt.col_offset,
+                        f"{cls.name}.{fn.name} {reason} but some path to "
+                        "exit never calls self._bump_epoch() — stale "
+                        "TrafficPlans replay the old topology"), stmt)

@@ -1,0 +1,77 @@
+"""SIM005 — `==` / `!=` on float clock/timing values.
+
+The event loop guarantees windowed timings equal drained timings to
+float precision, not bit-for-bit across code paths: comparing two sim
+times with `==` works until an optimization reassociates one sum.
+Timing comparisons must use a tolerance helper (`math.isclose`,
+`abs(a - b) < eps`) or ordering (`<=`).
+"""
+from __future__ import annotations
+
+import ast
+import re
+from typing import Iterable, Optional
+
+from tools.simlint.engine import FileCtx, Finding, Project, Rule
+
+# identifier "looks like a clock value": whole segment match on common
+# timing words, or a units suffix. Deliberately NOT `_at`/`_iter`: those
+# are iteration counters in this codebase (ints compare exactly).
+TIMEY_SEGMENT = re.compile(
+    r"^(t|t0|t1|dt|now|clock|time|deadline|finish|start|latency|eta|"
+    r"elapsed|until|mtbf)$")
+TIMEY_SUFFIX = re.compile(r"(_s|_sec|_secs|_seconds|_latency|_time)$")
+
+
+def _timey_name(expr: ast.expr) -> Optional[str]:
+    if isinstance(expr, ast.Name):
+        name = expr.id
+    elif isinstance(expr, ast.Attribute):
+        name = expr.attr
+    else:
+        return None
+    if TIMEY_SUFFIX.search(name):
+        return name
+    if any(TIMEY_SEGMENT.match(seg) for seg in name.split("_") if seg):
+        return name
+    return None
+
+
+class FloatClockEqRule(Rule):
+    code = "SIM005"
+    name = "float-clock-eq"
+    description = ("== / != between float clock/timing values — use "
+                   "math.isclose or an explicit tolerance")
+
+    def applies(self, rel: str) -> bool:
+        return rel.startswith("src/repro/")
+
+    def check(self, ctx: FileCtx, project: Project) -> Iterable[Finding]:
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Compare):
+                continue
+            operands = [node.left] + list(node.comparators)
+            for i, op in enumerate(node.ops):
+                if not isinstance(op, (ast.Eq, ast.NotEq)):
+                    continue
+                left, right = operands[i], operands[i + 1]
+                lname, rname = _timey_name(left), _timey_name(right)
+                # flag clock-vs-clock compares, or clock vs a float
+                # literal. One timey name against an arbitrary non-timey
+                # expression (tier tags, iteration counters, None/int
+                # sentinels, float("inf")) compares exactly.
+                if lname and rname:
+                    name = lname
+                elif (lname or rname) and any(
+                        isinstance(o, ast.Constant)
+                        and isinstance(o.value, float)
+                        for o in (left, right)):
+                    name = lname or rname
+                else:
+                    continue
+                sym = "==" if isinstance(op, ast.Eq) else "!="
+                yield Finding(
+                    self.code, ctx.rel, node.lineno, node.col_offset,
+                    f"`{sym}` on timing value `{name}` — float clock "
+                    "comparisons need math.isclose(...) or an explicit "
+                    "tolerance")

@@ -1,0 +1,93 @@
+"""SIM003 — mutable default arguments and dataclass field defaults.
+
+The PR 7 straggler bug: a class-level `StragglerPolicy()` default was
+shared by every ReliabilityController, so one controller's mitigation
+state leaked into the next scenario's replay. Python only raises for
+list/dict/set defaults on dataclass *fields*; plain function defaults
+and mutable dataclass-instance defaults slip through — this rule flags
+all of them. Use `None` + in-body init, or `field(default_factory=...)`.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable, List, Optional, Tuple
+
+from tools.simlint.engine import FileCtx, Finding, Project, Rule
+
+MUTABLE_CTORS = {"list", "dict", "set", "bytearray", "deque", "defaultdict",
+                 "Counter", "OrderedDict"}
+DISPLAY_NODES = (ast.List, ast.Dict, ast.Set, ast.ListComp, ast.DictComp,
+                 ast.SetComp)
+
+
+def _ctor_name(call: ast.Call) -> Optional[str]:
+    fn = call.func
+    if isinstance(fn, ast.Name):
+        return fn.id
+    if isinstance(fn, ast.Attribute):
+        return fn.attr
+    return None
+
+
+class MutableDefaultRule(Rule):
+    code = "SIM003"
+    name = "mutable-default"
+    description = ("mutable default argument / dataclass field default — "
+                   "shared across calls/instances; use "
+                   "field(default_factory=...) or None")
+
+    def applies(self, rel: str) -> bool:
+        return rel.startswith("src/repro/")
+
+    def _is_mutable_default(self, node: ast.expr,
+                            project: Project) -> Optional[str]:
+        """Reason string if `node` is a mutable default, else None."""
+        if isinstance(node, DISPLAY_NODES):
+            return "literal %s" % type(node).__name__.lower()
+        if isinstance(node, ast.Call):
+            name = _ctor_name(node)
+            if name in MUTABLE_CTORS:
+                return f"{name}() instance"
+            if name in project.dataclasses_frozen and \
+                    not project.dataclasses_frozen[name]:
+                return f"non-frozen dataclass {name}() instance"
+        return None
+
+    def check(self, ctx: FileCtx, project: Project) -> Iterable[Finding]:
+        dataclass_bodies = {
+            id(stmt)
+            for node in ast.walk(ctx.tree) if isinstance(node, ast.ClassDef)
+            and node.name in project.dataclasses_frozen
+            for stmt in node.body}
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                yield from self._check_function(ctx, project, node)
+            elif isinstance(node, ast.AnnAssign) and \
+                    id(node) in dataclass_bodies and node.value is not None:
+                # dataclass raises on list/dict/set itself; the gap is
+                # instances of mutable classes (the PR 7 bug)
+                reason = self._is_mutable_default(node.value, project)
+                if reason:
+                    yield Finding(
+                        self.code, ctx.rel, node.value.lineno,
+                        node.value.col_offset,
+                        f"dataclass field default is a {reason}, shared by "
+                        "every instance — use field(default_factory=...)")
+
+    def _check_function(self, ctx: FileCtx, project: Project,
+                        fn) -> Iterable[Finding]:
+        args = fn.args
+        defaults: List[Tuple[ast.arg, ast.expr]] = []
+        pos = args.posonlyargs + args.args
+        for a, d in zip(pos[len(pos) - len(args.defaults):], args.defaults):
+            defaults.append((a, d))
+        for a, d in zip(args.kwonlyargs, args.kw_defaults):
+            if d is not None:
+                defaults.append((a, d))
+        for a, d in defaults:
+            reason = self._is_mutable_default(d, project)
+            if reason:
+                yield Finding(
+                    self.code, ctx.rel, d.lineno, d.col_offset,
+                    f"default for `{a.arg}` is a {reason}, shared across "
+                    "calls — default to None and construct in the body")

@@ -1,0 +1,133 @@
+"""SIM002 — unseeded randomness inside the simulator.
+
+Replays must be bit-identical, so every random draw must come from an
+explicitly seeded generator: `np.random.default_rng(seed)`,
+`random.Random(seed)`, or a threaded `jax.random` key. Module-level
+`random.random()` / `np.random.shuffle()` draws from hidden global state
+seeded by the host and breaks replay.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable, Set
+
+from tools.simlint.engine import FileCtx, Finding, Project, Rule
+
+# numpy.random names that CONSTRUCT a generator; fine when given a seed
+# argument, flagged when called with no arguments (host-entropy seeding).
+NP_SAFE_CTORS = {"default_rng", "Generator", "RandomState", "SeedSequence",
+                 "Philox", "PCG64", "PCG64DXSM", "MT19937"}
+JAX_KEY_FNS = {"PRNGKey", "key"}
+
+
+class UnseededRandomRule(Rule):
+    code = "SIM002"
+    name = "unseeded-randomness"
+    description = ("draw from unseeded/global RNG state — use an "
+                   "explicitly seeded Generator or threaded jax key")
+
+    def applies(self, rel: str) -> bool:
+        return rel.startswith("src/repro/")
+
+    def check(self, ctx: FileCtx, project: Project) -> Iterable[Finding]:
+        numpy_aliases: Set[str] = set()
+        jax_aliases: Set[str] = set()
+        random_aliases: Set[str] = set()
+        np_random_aliases: Set[str] = set()   # from numpy import random as r
+        from_random: Set[str] = set()         # from random import shuffle
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.Import):
+                for a in node.names:
+                    bound = a.asname or a.name.split(".")[0]
+                    if a.name in ("numpy", "numpy.random"):
+                        numpy_aliases.add(bound)
+                    elif a.name in ("jax", "jax.random"):
+                        jax_aliases.add(bound)
+                    elif a.name == "random":
+                        random_aliases.add(bound)
+            elif isinstance(node, ast.ImportFrom) and node.level == 0:
+                if node.module == "numpy":
+                    np_random_aliases.update(a.asname or a.name
+                                             for a in node.names
+                                             if a.name == "random")
+                elif node.module == "random":
+                    from_random.update(a.asname or a.name for a in node.names
+                                       if a.name not in ("Random",
+                                                         "SystemRandom"))
+                elif node.module in ("jax", "jax.random"):
+                    # `from jax import random` — treat like jax alias base
+                    np_done = False
+                    for a in node.names:
+                        if node.module == "jax" and a.name == "random":
+                            jax_aliases.add(a.asname or a.name)
+                            np_done = True
+                    del np_done
+
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            fn = node.func
+            # bare `shuffle(x)` from `from random import shuffle`
+            if isinstance(fn, ast.Name) and fn.id in from_random:
+                yield self._finding(ctx, node, f"random.{fn.id}()",
+                                    "seed a `random.Random(seed)` instance")
+                continue
+            if not isinstance(fn, ast.Attribute):
+                continue
+            base = fn.value
+            # random.<fn>() on the stdlib module (Random(seed) is fine)
+            if isinstance(base, ast.Name) and base.id in random_aliases:
+                if fn.attr == "Random" and node.args:
+                    continue
+                if fn.attr in ("Random", "SystemRandom") and not node.args:
+                    yield self._finding(
+                        ctx, node, f"random.{fn.attr}()",
+                        "pass an explicit seed: `random.Random(seed)`")
+                    continue
+                if fn.attr == "SystemRandom":
+                    continue
+                yield self._finding(
+                    ctx, node, f"random.{fn.attr}()",
+                    "module-level stdlib RNG draws from hidden global "
+                    "state; use a seeded `random.Random(seed)`")
+                continue
+            # np.random.<fn>() / `from numpy import random as nr`
+            is_np_random = (
+                (isinstance(base, ast.Attribute)
+                 and isinstance(base.value, ast.Name)
+                 and base.value.id in numpy_aliases
+                 and base.attr == "random")
+                or (isinstance(base, ast.Name)
+                    and base.id in np_random_aliases))
+            if is_np_random:
+                if fn.attr in NP_SAFE_CTORS:
+                    if not node.args and not node.keywords:
+                        yield self._finding(
+                            ctx, node, f"np.random.{fn.attr}()",
+                            "zero-arg constructor seeds from host entropy; "
+                            "pass an explicit seed")
+                    continue
+                yield self._finding(
+                    ctx, node, f"np.random.{fn.attr}()",
+                    "legacy global-state numpy RNG; use "
+                    "`np.random.default_rng(seed)`")
+                continue
+            # jax.random.PRNGKey(<call>) — seed itself nondeterministic
+            is_jax_random = (
+                isinstance(base, ast.Attribute)
+                and isinstance(base.value, ast.Name)
+                and base.value.id in jax_aliases
+                and base.attr == "random") or (
+                isinstance(base, ast.Name) and base.id in jax_aliases
+                and base.id == "random")
+            if is_jax_random and fn.attr in JAX_KEY_FNS:
+                if any(isinstance(a, ast.Call) for a in node.args):
+                    yield self._finding(
+                        ctx, node, f"jax.random.{fn.attr}(<call>)",
+                        "key seeded from a runtime call is not "
+                        "replayable; derive it from the config seed")
+
+    def _finding(self, ctx: FileCtx, node: ast.Call, what: str,
+                 fix: str) -> Finding:
+        return Finding(self.code, ctx.rel, node.lineno, node.col_offset,
+                       f"unseeded randomness {what} — {fix}")

@@ -1,0 +1,108 @@
+"""SIM006 — unordered iteration feeding event submission / verdict booking.
+
+Iterating a `set` (or a dict whose insertion order is itself
+hash-dependent) and submitting events per element makes the event
+queue's tie-break order depend on `PYTHONHASHSEED` — replays diverge
+with no error. Any loop or comprehension over a set/dict expression
+whose body calls a scheduling/booking sink must go through
+`sorted(...)` first (which this rule treats as the escape hatch), or
+carry a pragma explaining why the order is already deterministic
+(e.g. a dict built by insertion from a sorted edge list).
+"""
+from __future__ import annotations
+
+import ast
+import re
+from typing import Iterable, List, Optional, Tuple
+
+from tools.simlint.engine import FileCtx, Finding, Project, Rule, attach_span
+from tools.simlint.dataflow import ContainerKinds
+
+# Calls that feed the event queue or book results. Deliberately NOT
+# plain `append`: accumulating into a local list is only a problem if
+# the list is consumed unsorted, and those consumers are themselves
+# sinks here.
+SINK_RE = re.compile(
+    r"^(submit\w*|send\w*|_?emit\w*|push\w*|enqueue\w*|schedule\w*|beat|"
+    r"fail_node|fail_edge|restore_node|restore_edge|observe|report_\w+|"
+    r"note_\w+|record\w*|book\w*|heappush|insort\w*)$")
+
+
+def _sink_call(node: ast.Call) -> Optional[str]:
+    fn = node.func
+    name = fn.attr if isinstance(fn, ast.Attribute) else \
+        getattr(fn, "id", None)
+    if name and SINK_RE.match(name):
+        return name
+    return None
+
+
+def _first_sink(body: List[ast.stmt]) -> Optional[str]:
+    for stmt in body:
+        for n in ast.walk(stmt):
+            if isinstance(n, ast.Call):
+                name = _sink_call(n)
+                if name:
+                    return name
+    return None
+
+
+class UnorderedIterRule(Rule):
+    code = "SIM006"
+    name = "unordered-iteration"
+    description = ("iteration over a set/dict feeds an event-submission or "
+                   "booking sink without sorted(...) — replay order "
+                   "becomes hash-seed dependent")
+
+    def applies(self, rel: str) -> bool:
+        return rel.startswith("src/repro/")
+
+    def check(self, ctx: FileCtx, project: Project) -> Iterable[Finding]:
+        # enclosing class for each function, for self.attr annotations
+        parents = {}
+        for cls in ast.walk(ctx.tree):
+            if isinstance(cls, ast.ClassDef):
+                for fn in cls.body:
+                    if isinstance(fn, (ast.FunctionDef,
+                                       ast.AsyncFunctionDef)):
+                        parents[id(fn)] = cls
+        funcs = [n for n in ast.walk(ctx.tree)
+                 if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))]
+        for fn in funcs:
+            kinds = ContainerKinds(fn, parents.get(id(fn)))
+            for node in ast.walk(fn):
+                if isinstance(node, (ast.For, ast.AsyncFor)):
+                    kind = kinds.expr_kind(node.iter)
+                    if kind is None:
+                        continue
+                    sink = _first_sink(node.body)
+                    if sink is None:
+                        continue
+                    yield attach_span(Finding(
+                        self.code, ctx.rel, node.lineno, node.col_offset,
+                        f"loop over unordered {kind} "
+                        f"`{ast.unparse(node.iter)}` calls sink "
+                        f"`{sink}(...)` — wrap the iterable in sorted(...) "
+                        "or justify the insertion order"), node)
+                elif isinstance(node, (ast.ListComp, ast.SetComp,
+                                       ast.GeneratorExp)):
+                    sink = None
+                    for n in ast.walk(node.elt):
+                        if isinstance(n, ast.Call):
+                            sink = _sink_call(n)
+                            if sink:
+                                break
+                    if sink is None:
+                        continue
+                    for gen in node.generators:
+                        kind = kinds.expr_kind(gen.iter)
+                        if kind is None:
+                            continue
+                        yield attach_span(Finding(
+                            self.code, ctx.rel, node.lineno,
+                            node.col_offset,
+                            f"comprehension over unordered {kind} "
+                            f"`{ast.unparse(gen.iter)}` calls sink "
+                            f"`{sink}(...)` — wrap in sorted(...) or "
+                            "justify the insertion order"), node)
+                        break

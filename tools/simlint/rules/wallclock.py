@@ -1,0 +1,79 @@
+"""SIM001 — wall-clock reads inside the simulator.
+
+The fabric clock is event-driven and exact; any `time.monotonic()` /
+`time.time()` / `datetime.now()` read inside `src/repro` couples sim
+results to host scheduling (the PR 7 heartbeat bug: `beat(now=None)`
+silently fell back to `time.monotonic()`). Sim code must thread the sim
+clock explicitly. Host-side launch/CLI timing under `src/repro/launch/`
+is exempt by allowlist.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable, Set
+
+from tools.simlint.engine import FileCtx, Finding, Project, Rule
+
+BANNED_TIME = {"time", "time_ns", "monotonic", "monotonic_ns",
+               "perf_counter", "perf_counter_ns", "clock", "process_time",
+               "process_time_ns"}
+BANNED_DATETIME = {"now", "utcnow", "today"}
+ALLOW_PREFIXES = ("src/repro/launch/",)
+
+
+class WallClockRule(Rule):
+    code = "SIM001"
+    name = "wall-clock-ban"
+    description = ("wall-clock read (`time.*`, `datetime.now`) inside the "
+                   "simulator — thread the sim clock instead")
+
+    def applies(self, rel: str) -> bool:
+        return rel.startswith("src/repro/") and \
+            not rel.startswith(ALLOW_PREFIXES)
+
+    def check(self, ctx: FileCtx, project: Project) -> Iterable[Finding]:
+        # `from time import monotonic [as m]` binds bare names to ban
+        from_time: Set[str] = set()
+        from_datetime: Set[str] = set()
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.ImportFrom) and node.level == 0:
+                if node.module == "time":
+                    from_time.update(a.asname or a.name for a in node.names
+                                     if a.name in BANNED_TIME)
+                elif node.module in ("datetime",):
+                    from_datetime.update(a.asname or a.name
+                                         for a in node.names
+                                         if a.name in ("datetime", "date"))
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            fn = node.func
+            if isinstance(fn, ast.Name) and fn.id in from_time:
+                yield self._finding(ctx, node, f"time.{fn.id}()")
+            elif isinstance(fn, ast.Attribute):
+                base = fn.value
+                if isinstance(base, ast.Name) and base.id == "time" \
+                        and fn.attr in BANNED_TIME:
+                    yield self._finding(ctx, node, f"time.{fn.attr}()")
+                elif fn.attr in BANNED_DATETIME and self._is_datetime(
+                        base, from_datetime):
+                    yield self._finding(
+                        ctx, node, f"{ast.unparse(fn)}()")
+
+    @staticmethod
+    def _is_datetime(base: ast.expr, from_datetime: Set[str]) -> bool:
+        if isinstance(base, ast.Name) and \
+                base.id in ({"datetime", "date"} | from_datetime):
+            return True
+        # datetime.datetime.now() / datetime.date.today()
+        return (isinstance(base, ast.Attribute)
+                and isinstance(base.value, ast.Name)
+                and base.value.id == "datetime"
+                and base.attr in ("datetime", "date"))
+
+    def _finding(self, ctx: FileCtx, node: ast.Call, what: str) -> Finding:
+        return Finding(
+            self.code, ctx.rel, node.lineno, node.col_offset,
+            f"wall-clock read {what} in simulator code — pass the sim "
+            "clock (`now=`) explicitly; host-side timing belongs under "
+            "src/repro/launch/")

@@ -1,0 +1,144 @@
+#!/usr/bin/env python
+"""Type-error baseline gate for `tools/` and `src/repro/runtime/`.
+
+Runs mypy (or pyright, whichever is installed) over the covered paths and
+compares the errors against the committed baseline
+(`tools/type_baseline.json`): NEW errors fail, legacy ones are tolerated
+until someone burns them down. Fingerprints are `path::code::message`
+with no line numbers, so unrelated edits that shift lines don't churn
+the baseline.
+
+    python tools/type_baseline.py              # gate against the baseline
+    python tools/type_baseline.py --update     # re-record the baseline
+    python tools/type_baseline.py --require    # fail if no checker found
+
+Without `--require`, a machine with neither checker installed skips with
+exit 0 (the repro container intentionally has no type checker; CI
+installs mypy and passes `--require`). The committed baseline records
+which checker produced it; results from the other checker are compared
+best-effort against an empty legacy set only when the baseline's checker
+is missing.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import re
+import shutil
+import subprocess
+import sys
+from pathlib import Path
+from typing import List, Optional, Sequence, Tuple
+
+ROOT = Path(__file__).resolve().parent.parent
+BASELINE = Path(__file__).resolve().parent / "type_baseline.json"
+COVERED = ("tools", "src/repro/runtime")
+
+MYPY_LINE = re.compile(
+    r"^(?P<path>[^:]+):\d+(?::\d+)?: error: (?P<msg>.*?)"
+    r"(?:\s+\[(?P<code>[\w-]+)\])?$")
+
+
+def find_checker() -> Optional[Tuple[str, List[str]]]:
+    """(name, argv prefix) of the first available checker."""
+    if shutil.which("mypy") is not None:
+        return "mypy", ["mypy"]
+    try:
+        import mypy  # noqa: F401
+        return "mypy", [sys.executable, "-m", "mypy"]
+    except ImportError:
+        pass
+    if shutil.which("pyright") is not None:
+        return "pyright", ["pyright", "--outputjson"]
+    return None
+
+
+def run_mypy(prefix: List[str]) -> List[str]:
+    argv = prefix + [
+        "--no-error-summary", "--show-error-codes", "--ignore-missing-imports",
+        "--follow-imports=silent", *COVERED]
+    proc = subprocess.run(argv, cwd=ROOT, capture_output=True, text=True)
+    fps = []
+    for line in proc.stdout.splitlines():
+        m = MYPY_LINE.match(line.strip())
+        if m:
+            path = Path(m.group("path")).as_posix()
+            fps.append(f"{path}::{m.group('code') or 'misc'}"
+                       f"::{m.group('msg')}")
+    return fps
+
+
+def run_pyright(prefix: List[str]) -> List[str]:
+    proc = subprocess.run(prefix + list(COVERED), cwd=ROOT,
+                          capture_output=True, text=True)
+    try:
+        data = json.loads(proc.stdout)
+    except json.JSONDecodeError:
+        return [f"<pyright>::parse::unreadable output "
+                f"(exit {proc.returncode})"]
+    fps = []
+    for d in data.get("generalDiagnostics", []):
+        if d.get("severity") != "error":
+            continue
+        path = Path(d.get("file", "?"))
+        rel = path.relative_to(ROOT).as_posix() if path.is_absolute() and \
+            str(path).startswith(str(ROOT)) else path.as_posix()
+        fps.append(f"{rel}::{d.get('rule', 'misc')}::{d.get('message', '')}")
+    return fps
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--update", action="store_true",
+                    help="re-record the baseline from the current errors")
+    ap.add_argument("--require", action="store_true",
+                    help="fail (exit 2) when no type checker is installed")
+    args = ap.parse_args(argv)
+
+    checker = find_checker()
+    if checker is None:
+        msg = "type_baseline: no mypy/pyright installed"
+        if args.require:
+            print(f"{msg} — required (CI installs mypy)", file=sys.stderr)
+            return 2
+        print(f"{msg}; skipping (CI runs this with --require)")
+        return 0
+    name, prefix = checker
+    current = sorted(set(
+        run_mypy(prefix) if name == "mypy" else run_pyright(prefix)))
+
+    if args.update:
+        BASELINE.write_text(json.dumps(
+            {"checker": name, "paths": list(COVERED),
+             "errors": current}, indent=2) + "\n")
+        print(f"type_baseline: recorded {len(current)} {name} error(s) "
+              f"to {BASELINE.name}")
+        return 0
+
+    if BASELINE.exists():
+        base = json.loads(BASELINE.read_text())
+    else:
+        base = {"checker": name, "errors": []}
+    legacy = set(base.get("errors", [])) if base.get("checker") == name \
+        else set()
+    if base.get("checker") not in (None, name):
+        print(f"type_baseline: baseline was recorded with "
+              f"{base.get('checker')}, comparing {name} results against "
+              "an empty legacy set", file=sys.stderr)
+
+    new = [fp for fp in current if fp not in legacy]
+    fixed = sorted(legacy - set(current))
+    for fp in new:
+        print(f"FAIL: new type error: {fp}")
+    if fixed:
+        print(f"type_baseline: {len(fixed)} legacy error(s) no longer "
+              "fire — run `python tools/type_baseline.py --update` to "
+              "shrink the baseline")
+    if not new:
+        print(f"type_baseline OK ({name}): {len(current)} error(s), all in "
+              f"the committed baseline of {len(legacy)}")
+    return 1 if new else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
