@@ -5,7 +5,7 @@ implementation detail and may move between releases:
 
     from repro import SimCluster, ClusterConfig, FabricConfig, FaultScript
     from repro import RecoveryPolicy, StreamRecovery, ComputeRecovery
-    from repro import HybridRecovery, RecoveryError
+    from repro import HybridRecovery, RecoveryError, RoutingError
     from repro import fftrainer_timeline, baseline_timeline
     from repro import compute_recovery_timeline, PodFabric
     from repro import TrafficPlan, compile_traffic_plan
@@ -26,6 +26,7 @@ __all__ = [
     "RecoveryPlan",
     "RecoveryReport",
     "RecoveryError",
+    "RoutingError",
     "StreamRecovery",
     "ComputeRecovery",
     "HybridRecovery",
@@ -49,6 +50,7 @@ _EXPORTS = {
     "RecoveryPlan": "repro.runtime.recovery",
     "RecoveryReport": "repro.runtime.recovery",
     "RecoveryError": "repro.runtime.recovery",
+    "RoutingError": "repro.core.lccl",
     "StreamRecovery": "repro.runtime.recovery",
     "ComputeRecovery": "repro.runtime.recovery",
     "HybridRecovery": "repro.runtime.recovery",

@@ -38,6 +38,9 @@ class CkptEngineConfig:
     full_every: int = 500          # multi-level insurance period
     snapshot_depth: int = 2
     quantum: int = DEFAULT_QUANTUM  # StateStream chunk size
+    # routing budget for split-policy streams this engine submits: max
+    # edge-disjoint paths to stripe across (None = the transport's route_k)
+    route_k: Optional[int] = None
 
 
 class CkptEngine:
@@ -85,7 +88,8 @@ class CkptEngine:
         elif route == "lazy":
             src = self.worker_id
         ticket = self.transport.send(stream, t, assembler=asm, src=src,
-                                     dst=dst, policy=policy)
+                                     dst=dst, policy=policy,
+                                     k=self.cfg.route_k)
         self.streamed_chunks += stream.n_chunks
         self.streamed_bytes += stream.total_bytes
         return ticket

@@ -49,7 +49,7 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core.lccl import (Edge, LinkScheduler, LinkTopology, PathTransfer,
-                             Transfer, edge_key)
+                             RoutingError, Transfer, edge_key)
 
 PyTree = Any
 DEFAULT_QUANTUM = 1 << 20          # 1 MiB — the paper's chunk granularity
@@ -285,6 +285,27 @@ class _PendingChunk:
     attempts: int = 0
 
 
+@dataclass
+class _StripeState:
+    """Routing context of one striped (multi-path) stream in flight.
+
+    Kept by `TopologyTransport` for every src+dst split send so the
+    transport can re-run the split when the fabric changes under the
+    stream: `epoch` is the topology epoch the current chunk allocation was
+    computed at — when it trails `topology.epoch`, a `rebalance()` cancels
+    the stream's never-started chunks and re-stripes them over the
+    surviving paths' residual capacity. `paths` tracks the CURRENT route
+    set (refreshed on every re-balance), which is also what NACK
+    retransmits pick their least-loaded live path from."""
+    ticket: StreamTicket
+    src: int
+    dst: int
+    policy: str
+    k: int
+    epoch: int
+    paths: List[List[Edge]]
+
+
 class _NackingTransport:
     """Shared delivery + NACK machinery for both transport flavors.
 
@@ -427,13 +448,13 @@ class StreamTransport(_NackingTransport):
              assembler: Optional[StreamAssembler] = None,
              seqs: Optional[Sequence[int]] = None,
              src: Optional[int] = None, dst: Optional[int] = None,
-             policy: str = "split") -> StreamTicket:
+             policy: str = "split", k: Optional[int] = None) -> StreamTicket:
         """Submit a stream's chunks as STATE traffic at link-time `t`
         (seconds; chunk sizes in bytes).
 
         `seqs` restricts to a subset of chunk indices — used to resume a
         partial transfer (send only `assembler.missing()`) or to model a
-        transfer interrupted after N chunks. `src`/`dst`/`policy` are
+        transfer interrupted after N chunks. `src`/`dst`/`policy`/`k` are
         accepted for interface parity with `TopologyTransport` and ignored
         (one link has no routing)."""
         chunks, ticket = self._open_ticket(stream, t, assembler, seqs)
@@ -478,14 +499,16 @@ class TopologyTransport(_NackingTransport):
     """Per-link transport: streams are routed onto `LinkTopology` /
     `PodFabric` edge paths.
 
-    Routing rules (ISSUE 2, tiered + bidirectional since ISSUE 3):
+    Routing rules (ISSUE 2, tiered + bidirectional since ISSUE 3, k-path
+    striped since ISSUE 10):
       * instant neighbor shards — the adjacent ring edge (`instant_route`,
         ``policy="shortest"``: one hop, nothing to split);
-      * recovery fetches (src AND dst given) — by default split across up to
-        two edge-disjoint live paths (both ring directions; on a `PodFabric`
-        both ways around the gateway ring) with bytes divided by residual
-        bandwidth (`LinkTopology.split_bytes`), so an idle symmetric ring
-        moves a recovery in half the single-direction time;
+      * recovery fetches (src AND dst given) — split across up to `k`
+        edge-disjoint live paths (default ``route_k=2``: both ring
+        directions; on a `PodFabric` both ways around the gateway ring, and
+        with `dcn_uplinks > 1` up to k=4 over the slack uplink rings) with
+        bytes divided by residual bandwidth (`LinkTopology.split_bytes`),
+        chunks striped path-by-path in share order;
       * lazy backups (src given, dst None) — split across the source's
         incident live edges by residual bandwidth: the state drains onto
         whichever tier (ICI ring direction or DCN uplink) has slack;
@@ -493,13 +516,31 @@ class TopologyTransport(_NackingTransport):
         drain seconds, tier-aware (a TRAIN-saturated ICI ring loses to an
         idle DCN hop).
 
+    Striped streams additionally RE-BALANCE mid-transfer: every src+dst
+    split send records its route set + the topology epoch it was computed
+    at (`_StripeState`), and when the fabric changes under an in-flight
+    stream — a `set_bandwidth` (gray-link degrade), a reliability-
+    controller quarantine (`fail_edge`), any dark-state change — the next
+    `run`/`drain` notices the epoch mismatch and `rebalance()` cancels the
+    stream's never-started chunks (`LinkTopology.cancel_path`), re-runs
+    the split over the surviving paths' residual capacity, and re-submits
+    them. Bytes already delivered or on the wire are never re-sent, ticket
+    accounting stays exact, and the re-balance itself bumps no epoch, so
+    compiled `TrafficPlan`s stay valid.
+
     TRAIN volume is submitted edge-by-edge (`submit_train` loads every live
     ring edge with the per-edge allreduce bytes; `submit_train_tiers` loads
     each tier with its own hierarchical-allreduce volume), so a hotspot edge
     delays exactly the streams crossing it."""
 
-    def __init__(self, topology: LinkTopology):
+    def __init__(self, topology: LinkTopology, route_k: int = 2,
+                 auto_rebalance: bool = True):
         self.topology = topology
+        self.route_k = route_k          # default split width for send/routes
+        self.auto_rebalance = auto_rebalance
+        self.rebalances = 0             # re-balance passes that moved chunks
+        self.chunks_rebalanced = 0      # chunks reassigned across all passes
+        self._stripes: List[_StripeState] = []
         self._init_counters()
 
     # ------------------------- submission ------------------------- #
@@ -526,22 +567,29 @@ class TopologyTransport(_NackingTransport):
         return (wid - 1) % self.topology.n, wid
 
     def routes(self, src: Optional[int], dst: Optional[int], nbytes: float,
-               policy: str = "split") -> List[Tuple[List[Edge], float]]:
+               policy: str = "split", k: Optional[int] = None
+               ) -> List[Tuple[List[Edge], float]]:
         """Resolve the edge paths a `nbytes` stream rides and the byte share
         each carries. Returns [(path, share_bytes), ...]; an empty path is
-        local delivery."""
+        local delivery. `k` is the routing budget for the split policy —
+        the maximum number of edge-disjoint paths to stripe across
+        (defaults to the transport's `route_k`); fewer may exist."""
         topo = self.topology
+        if k is None:
+            k = self.route_k
         if src is not None and dst is not None:
             if src == dst:
                 return [([], nbytes)]
             if policy == "shortest":
                 return [(topo.path(src, dst), nbytes)]
-            paths = topo.disjoint_paths(src, dst, k=2)
+            paths = topo.disjoint_paths(src, dst, k=k)
             if not paths:
-                raise RuntimeError(
+                raise RoutingError(
                     f"no live path {src} -> {dst} "
                     f"(dark nodes {sorted(topo.dark_nodes)}, "
-                    f"dark edges {sorted(topo.dark_edges)})")
+                    f"dark edges {sorted(topo.dark_edges)})",
+                    src=src, dst=dst, dark_nodes=topo.dark_nodes,
+                    dark_edges=topo.dark_edges)
             shares = topo.split_bytes(paths, nbytes)
             return [(p, s) for p, s in zip(paths, shares) if s > 0] \
                 or [(paths[0], nbytes)]
@@ -565,20 +613,41 @@ class TopologyTransport(_NackingTransport):
              assembler: Optional[StreamAssembler] = None,
              seqs: Optional[Sequence[int]] = None,
              src: Optional[int] = None, dst: Optional[int] = None,
-             policy: str = "split") -> StreamTicket:
+             policy: str = "split", k: Optional[int] = None) -> StreamTicket:
         """Submit a stream's chunks as STATE traffic along routed edge paths
         at link-time `t` (seconds).
 
-        With `src`/`dst` the chunks ride up to two edge-disjoint live paths
-        between the two nodes (store-and-forward per hop), bytes split by
-        residual bandwidth; ``policy="shortest"`` forces the single BFS
-        path. With only `src`, chunks fan out over its incident edges (lazy
-        placement). `seqs` resumes a partial transfer, as in
-        `StreamTransport.send`."""
+        With `src`/`dst` the chunks ride up to `k` edge-disjoint live paths
+        between the two nodes (store-and-forward per hop; `k` defaults to
+        the transport's `route_k`), bytes split by residual bandwidth and
+        chunks striped path-by-path; ``policy="shortest"`` forces the
+        single BFS path. With only `src`, chunks fan out over its incident
+        edges (lazy placement). `seqs` resumes a partial transfer, as in
+        `StreamTransport.send`. Striped sends register for mid-transfer
+        re-balancing (see class docstring)."""
         chunks, ticket = self._open_ticket(stream, t, assembler, seqs)
         nbytes = float(sum(c.nbytes for c in chunks))
-        routed = self.routes(src, dst, nbytes, policy)
-        # hand chunks to paths in order, each path taking its byte share
+        routed = self.routes(src, dst, nbytes, policy, k)
+        self._stripe(chunks, routed, t, assembler, ticket, count_bytes=True)
+        if src is not None and dst is not None and src != dst \
+                and policy == "split":
+            self._stripes.append(_StripeState(
+                ticket, src, dst, policy,
+                self.route_k if k is None else k, self.topology.epoch,
+                [p for p, _ in routed]))
+        self.streams_sent += 1
+        return ticket
+
+    def _stripe(self, chunks: Sequence[StreamChunk],
+                routed: Sequence[Tuple[List[Edge], float]], t: float,
+                assembler: Optional[StreamAssembler],
+                ticket: StreamTicket, *, count_bytes: bool,
+                attempts_by_seq: Optional[Dict[int, int]] = None) -> None:
+        """Hand chunks to paths in order, each path taking its byte share.
+        `count_bytes=False` replays chunks a re-balance withdrew before
+        they moved — already billed at their original submission, so
+        re-striping them must not double-count `state_bytes_submitted`
+        (`attempts_by_seq` likewise carries their retransmit counts over)."""
         quota = [share for _, share in routed]
         which = 0
         for c in chunks:
@@ -588,19 +657,126 @@ class TopologyTransport(_NackingTransport):
             path = routed[which][0]
             pt = self.topology.submit_path("STATE", float(c.nbytes), t, path)
             ticket.transfers.append(pt)
-            self.state_bytes_submitted += c.nbytes
-            pend = _PendingChunk(pt, c, assembler, ticket)
+            if count_bytes:
+                self.state_bytes_submitted += c.nbytes
+            pend = _PendingChunk(
+                pt, c, assembler, ticket,
+                attempts_by_seq.get(c.seq, 0) if attempts_by_seq else 0)
             if pt.finished:             # empty path: local, lands instantly
                 self._deliver(pend, t)
                 self.chunks_delivered += 1
             else:
                 self._pending.append(pend)
-        self.streams_sent += 1
-        return ticket
+
+    # ------------------------- re-balancing ------------------------- #
+    def _stripe_of(self, ticket: Optional[StreamTicket]
+                   ) -> Optional[_StripeState]:
+        for st in self._stripes:
+            if st.ticket is ticket:
+                return st
+        return None
+
+    def _path_load(self, path: Sequence[Edge]) -> float:
+        """A path's start offset in split_bytes' model: worst per-edge
+        queued drain seconds plus summed delivery latency."""
+        topo = self.topology
+        return max(topo.links[e].pending_bytes() / topo.links[e].bw
+                   for e in path) \
+            + sum(topo.links[e].latency for e in path)
+
+    def _maybe_rebalance(self) -> None:
+        """Re-balance when the fabric changed under an in-flight striped
+        stream — the topology epoch moved past the epoch a stripe's chunk
+        allocation was computed at (degrades, quarantines, dark-state
+        changes all bump it)."""
+        if not (self.auto_rebalance and self._stripes):
+            return
+        epoch = self.topology.epoch
+        if any(st.epoch != epoch for st in self._stripes):
+            self.rebalance()
+
+    def rebalance(self, t: Optional[float] = None) -> int:
+        """Re-run the k-path split for every striped in-flight stream over
+        the CURRENT topology and reassign the chunks that have not started
+        moving (withdrawable via `LinkTopology.cancel_path`) — delivered or
+        on-the-wire bytes are never re-sent. Re-submission happens at `t`
+        (default: the fabric clock, i.e. the instant the change was
+        noticed), never before a chunk's original submit time. Returns the
+        number of chunks reassigned; cancel/resubmit is pure queue surgery,
+        so no topology epoch is bumped and compiled plans stay valid."""
+        t_now = self.topology.clock if t is None else t
+        moved = 0
+        for st in self._stripes:
+            moved += self._rebalance_stripe(st, t_now)
+        if moved:
+            self.rebalances += 1
+            self.chunks_rebalanced += moved
+        return moved
+
+    def _rebalance_stripe(self, st: _StripeState, t: float) -> int:
+        st.epoch = self.topology.epoch
+        withdrawn: List[Tuple[_PendingChunk, PathTransfer]] = []
+        for pend in self._pending:
+            if pend.ticket is st.ticket and \
+                    isinstance(pend.transfer, PathTransfer):
+                old = pend.transfer
+                if self.topology.cancel_path(old):
+                    withdrawn.append((pend, old))
+        if not withdrawn:
+            return 0
+        gone_pend = {id(p) for p, _ in withdrawn}
+        self._pending = [p for p in self._pending
+                         if id(p) not in gone_pend]
+        gone_tr = {id(old) for _, old in withdrawn}
+        st.ticket.transfers = [tr for tr in st.ticket.transfers
+                               if id(tr) not in gone_tr]
+        chunks = [p.chunk for p, _ in withdrawn]
+        attempts = {p.chunk.seq: p.attempts for p, _ in withdrawn}
+        assembler = withdrawn[0][0].assembler
+        nbytes = float(sum(c.nbytes for c in chunks))
+        # never submit before the chunks' original submit time
+        t_sub = max(t, max(old.t_submit for _, old in withdrawn))
+        try:
+            routed = self.routes(st.src, st.dst, nbytes, st.policy, st.k)
+        except RoutingError:
+            # destination cut off: put the chunks back on their old paths
+            # (they will NACK/stall exactly as the static allocation would)
+            for pend, old in withdrawn:
+                pt = self.topology.submit_path(
+                    "STATE", float(pend.chunk.nbytes),
+                    max(t, old.t_submit), old.path)
+                st.ticket.transfers.append(pt)
+                self._pending.append(_PendingChunk(
+                    pt, pend.chunk, pend.assembler, st.ticket,
+                    pend.attempts))
+            return 0
+        st.paths = [p for p, _ in routed]
+        self._stripe(chunks, routed, t_sub, assembler, st.ticket,
+                     count_bytes=False, attempts_by_seq=attempts)
+        return len(chunks)
+
+    def _retransmit_path(self, st: _StripeState,
+                         fallback: Tuple[Edge, ...]) -> Sequence[Edge]:
+        """The current least-loaded LIVE path of a striped stream's route
+        set — where its NACK retransmits go, so resends also benefit from
+        re-balancing instead of pinning to the (possibly degraded or
+        quarantined) original path."""
+        live = [p for p in st.paths
+                if p and all(self.topology.edge_up(*e) for e in p)]
+        if not live:
+            live = [p for p in
+                    self.topology.disjoint_paths(st.src, st.dst, st.k) if p]
+            if not live:
+                return fallback
+            st.paths = live
+        return min(live, key=lambda p: (self._path_load(p), p))
 
     def _resend(self, pend: _PendingChunk, t: float) -> None:
-        path = pend.transfer.path if isinstance(pend.transfer, PathTransfer) \
-            else ()
+        path: Sequence[Edge] = pend.transfer.path \
+            if isinstance(pend.transfer, PathTransfer) else ()
+        st = self._stripe_of(pend.ticket)
+        if st is not None:
+            path = self._retransmit_path(st, tuple(path))
         pt = self.topology.submit_path("STATE", float(pend.chunk.nbytes), t,
                                        path)
         if pend.ticket is not None:
@@ -622,14 +798,20 @@ class TopologyTransport(_NackingTransport):
             # finishes millions of chunk transfers nothing needs afterwards)
             for sch in self.topology.links.values():
                 sch.done.clear()
+            # retire routing state of streams with nothing left in flight
+            self._stripes = [st for st in self._stripes
+                             if any(p.ticket is st.ticket
+                                    for p in self._pending)]
         return delivered
 
     def run(self, until: float) -> float:
+        self._maybe_rebalance()
         busy = self.topology.run(until)
         self.pump()
         return busy
 
     def _drain_links(self) -> float:
+        self._maybe_rebalance()
         return self.topology.drain()
 
     def _links_idle(self) -> bool:

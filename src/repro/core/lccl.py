@@ -198,6 +198,24 @@ class LinkScheduler:
         bisect.insort_right(q, tr, key=lambda x: x.t_submit)
         return tr
 
+    def cancel(self, tr: Transfer) -> bool:
+        """Withdraw a queued transfer that has NOT started moving bytes.
+
+        Returns True when `tr` was still sitting in its queue (removed by
+        identity — equal-valued transfers of one chunked stream must not
+        alias); False when it already finished or is the mid-flight STATE
+        item (`_rem`), whose transmitted quanta cannot be un-sent. This is
+        the substrate for mid-transfer re-balancing: only never-started
+        chunks are re-routable, so delivered bytes are never re-sent."""
+        if tr.finished or tr is self._rem:
+            return False
+        q = self._train if tr.kind == "TRAIN" else self._state
+        for i, queued in enumerate(q):
+            if queued is tr:
+                del q[i]
+                return True
+        return False
+
     def _finish(self, tr: Transfer, tx_end: float) -> None:
         """Mark `tr` delivered: transmission ended at `tx_end`; the receiver
         sees it `latency` seconds later (`t_finish`). The link itself is free
@@ -365,6 +383,33 @@ Edge = Tuple[int, int]
 # edge tiers: ICI = intra-pod ring link, DCN = inter-pod gateway hop
 TIER_ICI = "ici"
 TIER_DCN = "dcn"
+
+
+class RoutingError(RuntimeError):
+    """No usable route through the fabric.
+
+    Raised by `LinkTopology.path` / `disjoint_paths` consumers,
+    `split_bytes` (no candidate paths) and `least_loaded_edge` (no live
+    edges). Subclasses `RuntimeError` so existing probe sites (the
+    reliability controller's partition probe, `estimate_stream_seconds`'s
+    unreachable guard) keep working, but carries the routing context the
+    bare message used to bury in a string:
+
+    * ``src`` / ``dst`` — the requested endpoints (None when the failure
+      is not endpoint-specific, e.g. an empty live-edge set),
+    * ``dark_nodes`` / ``dark_edges`` — the dark sets at raise time,
+      sorted tuples, so handlers can report or react without re-querying
+      a topology that may have changed since."""
+
+    def __init__(self, message: str, *, src: Optional[int] = None,
+                 dst: Optional[int] = None,
+                 dark_nodes: Sequence[int] = (),
+                 dark_edges: Sequence[Edge] = ()):
+        super().__init__(message)
+        self.src = src
+        self.dst = dst
+        self.dark_nodes: Tuple[int, ...] = tuple(sorted(dark_nodes))
+        self.dark_edges: Tuple[Edge, ...] = tuple(sorted(dark_edges))
 
 
 def edge_key(u: int, v: int) -> Edge:
@@ -565,10 +610,12 @@ class LinkTopology:
                 return list(hit)
         p = self._bfs(src, dst, blocked or set())
         if p is None:
-            raise RuntimeError(
+            raise RoutingError(
                 f"no live path {src} -> {dst} "
                 f"(dark nodes {sorted(self.dark_nodes)}, "
-                f"dark edges {sorted(self.dark_edges)})")
+                f"dark edges {sorted(self.dark_edges)})",
+                src=src, dst=dst, dark_nodes=self.dark_nodes,
+                dark_edges=self.dark_edges)
         if not blocked:
             self._path_cache[(src, dst)] = tuple(p)
         return p
@@ -613,8 +660,13 @@ class LinkTopology:
 
         On a ring these are exactly the two directions around it; on a
         `PodFabric` the second path detours the pod-level gateway ring the
-        other way. The bidirectional routing policy splits a stream's bytes
-        across these by residual bandwidth (`split_bytes`)."""
+        other way, and with `dcn_uplinks > 1` further paths climb the
+        slack uplink rings (each pod exposes extra DCN-attached nodes, so
+        k=4 cross-pod routing is ICI-fanned across two independent gateway
+        rings × two ring directions). Greedy shortest-first with
+        accumulated edge blocking; the k-path routing policy splits a
+        stream's bytes across the result by residual bandwidth
+        (`split_bytes`)."""
         paths: List[List[Edge]] = []
         blocked: set = set()
         for _ in range(max(k, 1)):
@@ -638,8 +690,12 @@ class LinkTopology:
         ``sum_i r_i * max(0, T - c_i) = nbytes`` for the common finish time
         T; the returned byte shares are ``r_i * max(0, T - c_i)``. On an
         idle symmetric ring the two directions get exactly half each — the
-        bidirectional split that halves recovery time."""
-        assert paths, "split_bytes needs at least one path"
+        bidirectional split that halves recovery time; over k idle
+        equal-rate paths each gets ``nbytes / k``."""
+        if not paths:
+            raise RoutingError("split_bytes needs at least one path",
+                               dark_nodes=self.dark_nodes,
+                               dark_edges=self.dark_edges)
         infos = []
         for p in paths:
             if not p:                   # local delivery: infinite rate
@@ -679,7 +735,9 @@ class LinkTopology:
         the slack DCN tier wins."""
         live = self.live_edges()
         if not live:
-            raise RuntimeError("no live edges in the topology")
+            raise RoutingError("no live edges in the topology",
+                               dark_nodes=self.dark_nodes,
+                               dark_edges=self.dark_edges)
         return min(live, key=lambda e: (
             self.links[e].pending_bytes(kind) / self.links[e].bw,
             1.0 / self.links[e].bw, e))
@@ -697,6 +755,25 @@ class LinkTopology:
         pt.transfer = self.links[pt.path[0]].submit(kind, size, t)
         self._inflight[id(pt.transfer)] = pt
         return pt
+
+    def cancel_path(self, pt: PathTransfer) -> bool:
+        """Withdraw a multi-hop item that has not moved a single byte yet.
+
+        Only valid while the item is still queued (not started) on its
+        FIRST hop: once any edge transmitted part of it, those bytes are on
+        the wire and the item must run to delivery. Returns True when the
+        item was withdrawn (its first-hop transfer dequeued and the
+        `_inflight` mapping dropped); False when it is too late. Withdrawal
+        is pure queue surgery — no dark/bandwidth state changes — so it
+        deliberately does NOT bump the topology epoch and compiled
+        `TrafficPlan`s stay valid across a re-balance."""
+        if pt.finished or pt.transfer is None or pt.hop != 0:
+            return False
+        if not self.links[pt.path[0]].cancel(pt.transfer):
+            return False
+        del self._inflight[id(pt.transfer)]
+        pt.transfer = None
+        return True
 
     def submit_train_edge(self, u: int, v: int, nbytes: float, t: float
                           ) -> Transfer:
@@ -885,6 +962,14 @@ class PodFabric(LinkTopology):
     ICI -> gateway -> DCN -> gateway -> ICI, store-and-forward, and a
     darkened pod forces DCN detours the other way around the gateway ring.
 
+    ``dcn_uplinks`` provisions extra pod-level rings: uplink ``j`` of pod
+    ``p`` is node ``p * pod_size + j * pod_size // dcn_uplinks`` (uplink 0
+    is the gateway), and the j-th uplinks of all pods form their own DCN
+    ring. The default (1) reproduces the classic single-gateway fabric
+    edge-for-edge; with 2 uplink rings a cross-pod stream has up to four
+    edge-disjoint paths (two ring directions × two uplink rings), which is
+    what k=4 recovery striping rides.
+
     ``edge_bw`` / ``edge_latency`` override individual edges (hotspots);
     `fail_pod` darkens every node of a pod at once (`inject_storm` drives
     correlated failures from a seed)."""
@@ -893,8 +978,10 @@ class PodFabric(LinkTopology):
                  dcn_bw: float, *, quantum: float = 1 << 20,
                  ici_latency: float = 0.0, dcn_latency: float = 0.0,
                  edge_bw: Optional[Dict[Edge, float]] = None,
-                 edge_latency: Optional[Dict[Edge, float]] = None):
+                 edge_latency: Optional[Dict[Edge, float]] = None,
+                 dcn_uplinks: int = 1):
         assert n_pods >= 1 and pod_size >= 1
+        assert dcn_uplinks >= 1
         self.kind = "pods"
         self.n_pods = n_pods
         self.pod_size = pod_size
@@ -902,6 +989,8 @@ class PodFabric(LinkTopology):
         self.dcn_bw = dcn_bw
         self.ici_latency = ici_latency
         self.dcn_latency = dcn_latency
+        # distinct uplink offsets cap at pod_size (offsets collide beyond)
+        self.dcn_uplinks = min(dcn_uplinks, pod_size)
         tiers: Dict[Edge, str] = {}
         for p in range(n_pods):
             base = p * pod_size
@@ -910,10 +999,11 @@ class PodFabric(LinkTopology):
                     e = edge_key(base + i, base + (i + 1) % pod_size)
                     tiers[e] = TIER_ICI
         if n_pods > 1:
-            for p in range(n_pods if n_pods > 2 else 1):
-                e = edge_key(self.gateway(p),
-                             self.gateway((p + 1) % n_pods))
-                tiers[e] = TIER_DCN
+            for j in range(self.dcn_uplinks):
+                for p in range(n_pods if n_pods > 2 else 1):
+                    e = edge_key(self.uplink(p, j),
+                                 self.uplink((p + 1) % n_pods, j))
+                    tiers[e] = TIER_DCN
         bw = {e: (ici_bw if t == TIER_ICI else dcn_bw)
               for e, t in tiers.items()}
         bw.update(edge_bw or {})
@@ -932,8 +1022,15 @@ class PodFabric(LinkTopology):
         return list(range(base, base + self.pod_size))
 
     def gateway(self, pod: int) -> int:
-        """The pod's DCN-attached node (node 0 of the pod)."""
+        """The pod's primary DCN-attached node (node 0 of the pod)."""
         return pod * self.pod_size
+
+    def uplink(self, pod: int, j: int = 0) -> int:
+        """The pod's j-th DCN-attached node (uplink 0 is the gateway);
+        uplinks are spread evenly around the pod's ICI ring so their DCN
+        rings stay edge-disjoint from each other AND from the intra-pod
+        hops between them."""
+        return pod * self.pod_size + (j * self.pod_size) // self.dcn_uplinks
 
     # ------------------------- failure state ------------------------- #
     def fail_pod(self, pod: int) -> None:

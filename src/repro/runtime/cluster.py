@@ -97,6 +97,16 @@ class FabricConfig:
     ici_latency: float = 0.0
     dcn_latency: float = 0.0
     compile_plan: bool = False
+    # routing budget for split-policy recovery/backup streams: max
+    # edge-disjoint paths to stripe each stream across (k=2 reproduces the
+    # historical both-ring-directions split bit-exactly)
+    route_k: int = 2
+    # DCN uplinks per pod on a PodFabric (each uplink forms its own
+    # gateway ring; 1 reproduces the historical single-gateway fabric)
+    dcn_uplinks: int = 1
+    # re-run split_bytes over surviving paths when the topology epoch
+    # bumps mid-transfer (False pins chunks to their original paths)
+    rebalance: bool = True
 
 
 _CLUSTER_FIELDS = {f.name for f in dataclasses.fields(ClusterConfig)}
@@ -126,8 +136,8 @@ class Worker:
     wid: int
     alive: bool = True
     host_alive: bool = True           # hardware failure kills host RAM too
-    engine: CkptEngine = None
-    loader: PrefetchingLoader = None
+    engine: Optional[CkptEngine] = None
+    loader: Optional[PrefetchingLoader] = None
     step_times: List[float] = field(default_factory=list)
 
 
@@ -202,12 +212,15 @@ class SimCluster:
         self.dcn_bw = fc.dcn_bw
         self.ici_latency = fc.ici_latency
         self.dcn_latency = fc.dcn_latency
+        self.route_k = fc.route_k
+        self.dcn_uplinks = fc.dcn_uplinks
         if fc.pods > 1 and dp % fc.pods != 0:
             raise ValueError(
                 f"pods={fc.pods} must divide dp={dp} to build a PodFabric "
                 f"(every pod gets dp/pods workers)")
         self.topology = self._build_fabric(dp, fc.edge_bw)
-        self.transport = TopologyTransport(self.topology)
+        self.transport = TopologyTransport(self.topology, route_k=fc.route_k,
+                                           auto_rebalance=fc.rebalance)
         self.last_storm: Optional[StormReport] = None
         self.instant_hidden = 0        # instant-ckpt drained within the iter
         self.instant_exposed = 0       # ... spilled past the boundary
@@ -299,7 +312,8 @@ class SimCluster:
                                  self.dcn_bw, quantum=self.quantum,
                                  ici_latency=self.ici_latency,
                                  dcn_latency=self.dcn_latency,
-                                 edge_bw=edge_bw)
+                                 edge_bw=edge_bw,
+                                 dcn_uplinks=self.dcn_uplinks)
             else:
                 import warnings
                 warnings.warn(

@@ -17,12 +17,14 @@ per-link schedulers while the allreduce loads every ring edge, so a single
 hotspot edge bottlenecks the timeline by exactly its residual bandwidth.
 
 On a hierarchical `PodFabric` the state leg can also be scheduled across
-SEVERAL edge-disjoint paths at once (`paths=`): the bytes are split by
-residual bandwidth (`LinkTopology.split_bytes`), so bidirectional ring
-routing — both directions around the ring, or both ways around the DCN
-gateway ring past a darkened pod — shows up in the timeline as the residual
-capacity of the two directions combined, and cross-pod recovery is bounded
-by DCN bandwidth plus the per-hop delivery latency.
+SEVERAL edge-disjoint paths at once (`paths=`): the bytes are water-filled
+over up to k paths by residual bandwidth (`LinkTopology.split_bytes`) —
+both ring directions, both ways around the DCN gateway ring past a darkened
+pod, and any extra `dcn_uplinks` gateway rings — so the timeline's state
+leg is the k paths' combined residual capacity, and cross-pod recovery is
+bounded by the aggregate DCN bandwidth plus the per-hop delivery latency.
+Pass `topology.disjoint_paths(src, dst, k=k)` to reproduce exactly what the
+live transport stripes over (`TopologyTransport(route_k=k)`).
 
 Orchestration steps we can only model (Docker pulls, pod scheduling) keep the
 paper's measured Table 5 values; connection building is calibrated on our
@@ -89,10 +91,12 @@ def schedule_state_phase(state_bytes: float, bandwidth: float, *,
     Per-edge delivery latency accrues per hop, so a DCN detour pays its
     latency on every gateway crossing.
 
-    `paths` (several edge-disjoint paths) enables bidirectional routing: the
-    volume is split across the paths by residual bandwidth
+    `paths` (up to k edge-disjoint paths) enables k-path striping: the
+    volume is water-filled across the paths by residual bandwidth
     (`LinkTopology.split_bytes`), so on an idle symmetric ring both
-    directions carry half and the state leg halves.
+    directions carry half and the state leg halves; with k=4 disjoint
+    DCN routes an idle cross-pod leg quarters (minus per-hop latency and
+    pipeline-fill, which the per-edge schedulers model exactly).
 
     The returned duration is exact: the fabric clock is event-ordered, so
     `drain()` is a single pass that forwards every hop at its true arrival

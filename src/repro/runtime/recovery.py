@@ -87,10 +87,18 @@ class FaultScript:
     retained and the next `recover()` resumes from them.
     `corrupt_chunks` — flip a byte in that many recovery chunks on the wire
     (first missing chunks, stream by stream in worker order); the CRC
-    rejects them and the NACK path retransmits."""
+    rejects them and the NACK path retransmits.
+    `mid_stream_degrade` — ``(u, v, factor)``: while the recovery streams
+    are in flight, edge (u, v)'s bandwidth is multiplied by `factor` at
+    `degrade_at_s` seconds after the state leg starts (a gray link browning
+    out mid-transfer). The transport's k-path re-balancer then reassigns
+    the not-yet-started chunks over the surviving paths' residual capacity
+    (or the allocation stays static with re-balancing disabled)."""
     hardware: bool = False
     interrupt_after_chunks: Optional[int] = None
     corrupt_chunks: int = 0
+    mid_stream_degrade: Optional[Tuple[int, int, float]] = None
+    degrade_at_s: float = 0.0
 
 
 def orchestration_timeline(cluster, faults: FaultScript) -> Dict[str, float]:
@@ -133,6 +141,11 @@ class RecoveryReport:
     policy: str = "stream"             # name of the policy that executed
     state_bytes_streamed: float = 0.0  # STATE bytes this recovery put on wire
     compute_seconds: float = 0.0       # replay compute burned (checkpoint-free)
+    # wall seconds the chunk streams themselves took on the fabric (the
+    # scheduler's finish minus submit) — finer grained than the timeline's
+    # network_and_state leg, which is floored by pod-allocation constants,
+    # so k-path striping and mid-transfer re-balancing stay visible
+    stream_seconds: float = 0.0
 
 
 @dataclass(frozen=True)
@@ -165,6 +178,9 @@ class RecoveryPlan:
     timeline: Dict[str, float]
     t_start: float
     legs: List[Union[StreamLeg, ComputeLeg]] = field(default_factory=list)
+    # routing budget for the stream legs: max edge-disjoint paths each
+    # recovery stream stripes across (None = the transport's route_k)
+    route_k: Optional[int] = None
 
     @property
     def stream_legs(self) -> List[StreamLeg]:
@@ -211,17 +227,19 @@ def _plan_context(cluster, faults: FaultScript,
 
 
 def estimate_stream_seconds(topology, src: Optional[int], dst: int,
-                            nbytes: float) -> float:
-    """Idle-fabric ETA for streaming `nbytes` src -> dst over up to two
-    edge-disjoint live paths (the transport's bidirectional routing). Used
-    by `HybridRecovery` to race a stream leg against a compute leg; returns
+                            nbytes: float, k: int = 2) -> float:
+    """Idle-fabric ETA for streaming `nbytes` src -> dst over up to `k`
+    edge-disjoint live paths (the transport's k-path striped routing):
+    per-path bottleneck rates sum, the worst path latency is paid once.
+    Used by `HybridRecovery` to race a stream leg against a compute leg
+    and by table5 to validate the simulated k-path state leg; returns
     inf when no live path exists (the storm cut the holder off)."""
     if src is None:
         return float("inf")
     if src == dst:
         return 0.0
     try:
-        paths = topology.disjoint_paths(src, dst, k=2)
+        paths = topology.disjoint_paths(src, dst, k=k)
     except Exception:  # noqa: BLE001 - no route == unstreamable
         return float("inf")
     paths = [p for p in paths if p]
@@ -271,13 +289,21 @@ def _pick_replayers(cluster, wid: int, failed: List[int]) -> Tuple[int, ...]:
 # --------------------------------------------------------------------------- #
 # StreamRecovery — today's behavior, timing-identical
 # --------------------------------------------------------------------------- #
+@dataclass
 class StreamRecovery:
     """FFTrainer's stream-based recovery: chunked STATE traffic from the
     DP-ring backup holders, full-checkpoint fallback when the neighbor copy
     is gone. The execute path is the old `SimCluster._recover_from_*` code,
     moved — timings are bit-identical (pinned in
-    tests/test_recovery_policy.py)."""
+    tests/test_recovery_policy.py). `route_k` caps how many edge-disjoint
+    paths each recovery stream stripes across (None = the transport's
+    default, normally 2)."""
+    route_k: Optional[int] = None
     name: ClassVar[str] = "stream"
+
+    def _effective_k(self, cluster) -> int:
+        return self.route_k if self.route_k is not None \
+            else getattr(cluster.transport, "route_k", 2)
 
     def plan(self, cluster, failed: List[int],
              faults: FaultScript = FaultScript(), *,
@@ -288,15 +314,16 @@ class StreamRecovery:
         if cluster._recoverable_from_neighbors(failed):
             ldp, old_of, new_of = cluster._shard_layout()
             nbytes = cluster.shard_nbytes()
+            k = self._effective_k(cluster)
             legs: List[Union[StreamLeg, ComputeLeg]] = []
             for wid in failed:
                 holder = new_of[(old_of[wid] + 1) % ldp]
                 legs.append(StreamLeg(
                     wid, holder, nbytes,
                     estimate_stream_seconds(cluster.topology, holder, wid,
-                                            nbytes)))
+                                            nbytes, k=k)))
             return RecoveryPlan(self.name, "neighbor", cluster, failed,
-                                faults, tl, t0, legs)
+                                faults, tl, t0, legs, route_k=self.route_k)
         if faults.interrupt_after_chunks is not None:
             raise RecoveryError(
                 "interrupt_after_chunks models a failure mid neighbor-"
@@ -341,6 +368,10 @@ class ComputeRecovery:
             raise RecoveryError(
                 "corrupt_chunks corrupts recovery chunks on the wire; "
                 "compute-based recovery streams no chunks")
+        if faults.mid_stream_degrade is not None:
+            raise RecoveryError(
+                "mid_stream_degrade browns out an edge under an in-flight "
+                "recovery stream; compute-based recovery streams no chunks")
         tl, t0 = _plan_context(cluster, faults, timeline, t_start)
         failed = sorted(failed)
         nbytes = cluster.shard_nbytes()
@@ -380,9 +411,17 @@ class HybridRecovery:
     backup holder is reachable over a fast live path streams; one whose
     stream ETA loses to the replay ETA (or whose backup died with it)
     recomputes. The state leg is the slower of the two racing legs — both
-    run concurrently."""
+    run concurrently. `route_k` caps how many edge-disjoint paths each
+    stream leg stripes across (None = the transport's default); the
+    stream-vs-compute race uses the SAME k for its ETA, so a wider routing
+    budget honestly tilts the race toward streaming."""
     cost_model: ReplayCostModel = field(default_factory=ReplayCostModel)
+    route_k: Optional[int] = None
     name: ClassVar[str] = "hybrid"
+
+    def _effective_k(self, cluster) -> int:
+        return self.route_k if self.route_k is not None \
+            else getattr(cluster.transport, "route_k", 2)
 
     def plan(self, cluster, failed: List[int],
              faults: FaultScript = FaultScript(), *,
@@ -397,13 +436,14 @@ class HybridRecovery:
         failed = sorted(failed)
         ldp, old_of, new_of = cluster._shard_layout()
         nbytes = cluster.shard_nbytes()
+        k = self._effective_k(cluster)
         legs: List[Union[StreamLeg, ComputeLeg]] = []
         for wid in failed:
             o = old_of[wid]
             kind, _src = cluster._slice_source(o, ldp, new_of)
             holder = new_of[(o + 1) % ldp] if kind != "none" else None
             est_stream = estimate_stream_seconds(cluster.topology, holder,
-                                                 wid, nbytes)
+                                                 wid, nbytes, k=k)
             replayers = _pick_replayers(cluster, wid, failed)
             cost = replay_compute_cost(nbytes,
                                        n_replayers=max(len(replayers), 1),
@@ -413,7 +453,7 @@ class HybridRecovery:
             else:
                 legs.append(ComputeLeg(wid, replayers, cost))
         return RecoveryPlan(self.name, "mixed", cluster, failed, faults,
-                            tl, t0, legs)
+                            tl, t0, legs, route_k=self.route_k)
 
     def execute(self, plan: RecoveryPlan) -> RecoveryReport:
         return _execute_neighbor_streams(
@@ -523,9 +563,18 @@ def _execute_neighbor_streams(plan: RecoveryPlan, stream_wids: List[int],
         if take:
             tickets.append(cluster.transport.send(
                 stream, t0, assembler=asm, seqs=take,
-                src=holder_wid, dst=wid))
+                src=holder_wid, dst=wid, k=plan.route_k))
             chunks_sent += len(take)
         inflight[wid] = (stream, asm)
+    if faults.mid_stream_degrade is not None and tickets:
+        # a gray link browns out UNDER the in-flight streams: run the
+        # fabric to the degrade instant, apply it (epoch bump), and let the
+        # drain's entry check re-balance the not-yet-started chunks over
+        # the surviving paths' residual capacity
+        u, v, factor = faults.mid_stream_degrade
+        cluster.transport.run(until=t0 + max(float(faults.degrade_at_s),
+                                             0.0))
+        cluster.degrade_edge(int(u), int(v), float(factor))
     cluster.transport.drain()
     bytes_streamed = cluster.transport.accounting()["state_bytes"] - acct0
 
@@ -544,7 +593,8 @@ def _execute_neighbor_streams(plan: RecoveryPlan, stream_wids: List[int],
                               chunks_sent=chunks_sent,
                               chunks_reused=chunks_reused,
                               policy=plan.policy,
-                              state_bytes_streamed=bytes_streamed)
+                              state_bytes_streamed=bytes_streamed,
+                              stream_seconds=finish - t0)
 
     # ---- every stream landed: rebuild the optimizer vector, slice by
     # slice of the SNAPSHOT layout (which differs from the live
@@ -612,7 +662,8 @@ def _execute_neighbor_streams(plan: RecoveryPlan, stream_wids: List[int],
                           policy=plan.policy,
                           state_bytes_streamed=bytes_streamed,
                           compute_seconds=float(sum(
-                              l.cost.compute_seconds for l in compute_legs)))
+                              l.cost.compute_seconds for l in compute_legs)),
+                          stream_seconds=finish - t0 if stream_wids else 0.0)
 
 
 def _execute_full(plan: RecoveryPlan) -> RecoveryReport:

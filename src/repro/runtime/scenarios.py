@@ -28,9 +28,11 @@ actions:
   ``storm``             params: seed, pods=1, edge_failures=0 — seeded
                         correlated storm (`SimCluster.inject_storm`)
   ``recover``           params: FaultScript fields (hardware,
-                        interrupt_after_chunks, corrupt_chunks), policy —
-                        scripted recovery attempt (waits out detection
-                        first); without one, the runner auto-recovers
+                        interrupt_after_chunks, corrupt_chunks,
+                        mid_stream_degrade=(u, v, factor), degrade_at_s),
+                        policy — scripted recovery attempt (waits out
+                        detection first); without one, the runner
+                        auto-recovers
   ``degrade_edge``      params: u, v, factor — gray failure: the link
                         silently runs at factor x its current rate
   ``heal_edge``         params: u, v — repair + lift quarantine
@@ -96,6 +98,12 @@ class Scenario:
     full_every: int = 50
     t_iter: float = 0.05
     recovery: str = "stream"
+    # k-path routing surface (PR 10): stripe budget for split-policy
+    # streams, DCN uplinks per pod, and whether in-flight stripes
+    # re-balance on a topology-epoch bump (False pins the static split)
+    route_k: int = 2
+    dcn_uplinks: int = 1
+    rebalance: bool = True
     reliability: ReliabilityConfig = FAST_DETECTION
     events: Tuple[Event, ...] = ()
     seed: int = 0
@@ -121,6 +129,12 @@ class Verdict:
     state_bytes_streamed: float = 0.0
     chunks_reused: int = 0
     recovery_total_s: float = 0.0       # sum over completed recoveries
+    # k-path striping surface: wall seconds the recovery chunk streams
+    # spent on the fabric (finer than recovery_total_s, which is floored
+    # by pod-allocation constants), plus the transport's re-balance books
+    stream_seconds: float = 0.0         # sum over all recovery attempts
+    rebalances: int = 0                 # mid-transfer re-balance passes
+    chunks_rebalanced: int = 0          # chunks moved between paths
 
     def pinned(self) -> Dict[str, Any]:
         """The deterministic comparison dict the fleet test asserts."""
@@ -131,6 +145,7 @@ class Verdict:
         d["exposed_seconds"] = round(self.exposed_seconds, 9)
         d["state_bytes_streamed"] = round(self.state_bytes_streamed, 3)
         d["recovery_total_s"] = round(self.recovery_total_s, 9)
+        d["stream_seconds"] = round(self.stream_seconds, 9)
         return d
 
 
@@ -151,6 +166,8 @@ def build_cluster(sc: Scenario, ckpt_dir):
                        ckpt_dir=Path(ckpt_dir), full_every=sc.full_every,
                        seed=sc.seed, t_iter_model=sc.t_iter)
     fc = FabricConfig(link_bw=sc.link_bw, pods=sc.pods, dcn_bw=sc.dcn_bw,
+                      route_k=sc.route_k, dcn_uplinks=sc.dcn_uplinks,
+                      rebalance=sc.rebalance,
                       **({"quantum": sc.quantum} if sc.quantum else {}))
     return SimCluster(_tiny_arch(), cluster=cc, fabric=fc,
                       recovery=sc.recovery, reliability=sc.reliability)
@@ -210,11 +227,16 @@ class _Runner:
         self.wait_for_detection()
         v.detections = len(clu.reliability.detection_times)
         v.detection_latency_s = clu.reliability.last_detection_latency
+        msd = kw.get("mid_stream_degrade")
         faults = FaultScript(
             hardware=bool(kw.get("hardware", self._last_hw)),
             interrupt_after_chunks=kw.get("interrupt_after_chunks"),
-            corrupt_chunks=int(kw.get("corrupt_chunks", 0)))
+            corrupt_chunks=int(kw.get("corrupt_chunks", 0)),
+            mid_stream_degrade=(None if msd is None else
+                                (int(msd[0]), int(msd[1]), float(msd[2]))),
+            degrade_at_s=float(kw.get("degrade_at_s", 0.0)))
         rep = clu.recover(faults, policy=kw.get("policy"))
+        v.stream_seconds += getattr(rep, "stream_seconds", 0.0) or 0.0
         if rep.kind == "interrupted":
             v.interrupted += 1
             return
@@ -250,6 +272,8 @@ class _Runner:
         v.gray_tolerated = sum(1 for e in gray
                                if not e.detail.get("quarantined"))
         v.final_full_every = clu.reliability.current_full_every
+        v.rebalances = getattr(clu.transport, "rebalances", 0)
+        v.chunks_rebalanced = getattr(clu.transport, "chunks_rebalanced", 0)
         if v.detection_latency_s is None:
             v.detection_latency_s = clu.reliability.last_detection_latency
         v.detections = len(clu.reliability.detection_times)
@@ -310,15 +334,47 @@ def corpus() -> List[Scenario]:
             ev(3, "degrade_edge", u=0, v=4, factor=0.2),
         )),
         # mid-transfer degradation: recovery is interrupted after 2 chunks
-        # (64 KiB chunking makes the shard a 5-chunk stream), the delivery
-        # link silently degrades, and the resumed recovery re-streams only
-        # the missing chunks over the degraded wire
-        Scenario(name="mid_transfer_degradation", steps=10, quantum=1 << 16,
-                 events=(
+        # (16 KiB chunking makes the shard a many-chunk stream), then the
+        # resumed recovery's delivery link browns out UNDER the in-flight
+        # stream — the transport re-balances the not-yet-started chunks
+        # onto the surviving ring direction (slow links so the state leg
+        # dominates and the re-balance is visible in recovery_total_s)
+        Scenario(name="mid_transfer_degradation", steps=10, link_bw=2e8,
+                 quantum=1 << 14, events=(
             ev(5, "fail", wids=[1]),
             ev(5, "recover", interrupt_after_chunks=2),
-            ev(5, "degrade_edge", u=1, v=2, factor=0.5),
-            ev(5, "recover"),
+            ev(5, "recover", mid_stream_degrade=(1, 2, 0.05),
+               degrade_at_s=3e-4),
+        )),
+        # the same brown-out with re-balancing DISABLED: chunks stay
+        # pinned to their original paths and ride out the degraded wire —
+        # the static-2-path baseline the re-balanced verdict is read
+        # against (recovery_total_s strictly larger)
+        Scenario(name="mid_transfer_degradation_static", steps=10,
+                 link_bw=2e8, quantum=1 << 14, rebalance=False, events=(
+            ev(5, "fail", wids=[1]),
+            ev(5, "recover", interrupt_after_chunks=2),
+            ev(5, "recover", mid_stream_degrade=(1, 2, 0.05),
+               degrade_at_s=3e-4),
+        )),
+        # k>2 striping: with 4 DCN uplinks per pod every node is a
+        # gateway, so the cross-pod stream 4 -> 3 has THREE edge-disjoint
+        # paths (node 4's full fabric degree) and a route_k=3 budget
+        # stripes the shard across all of them
+        Scenario(name="cross_pod_k3_stripe", steps=10, dp=8, pods=2,
+                 global_batch=16, dcn_bw=1e8, dcn_uplinks=4, route_k=3,
+                 quantum=1 << 14, events=(
+            ev(5, "fail", wids=[3]),
+        )),
+        # k>2 re-balancing: the same 3-path stripe loses most of its
+        # primary DCN uplink mid-transfer; the remaining chunks re-balance
+        # onto the two surviving paths' residual capacity
+        Scenario(name="cross_pod_k3_rebalance", steps=10, dp=8, pods=2,
+                 global_batch=16, dcn_bw=1e8, dcn_uplinks=4, route_k=3,
+                 quantum=1 << 14, events=(
+            ev(5, "fail", wids=[3]),
+            ev(5, "recover", mid_stream_degrade=(0, 4, 0.1),
+               degrade_at_s=1e-4),
         )),
         # a persistent 2x straggler: EWMAs flag it after min_observations
         # steps and its role migrates to a spare — the cluster's step time

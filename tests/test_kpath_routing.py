@@ -1,0 +1,259 @@
+"""K-path striped recovery streams with mid-transfer re-balancing
+(ISSUE 10).
+
+Pins, in order: the `dcn_uplinks` fabric surface (default bit-identical
+to the legacy single-gateway fabric), k edge-disjoint path discovery,
+k=4 beating k=2 on an idle cross-pod leg and matching the
+`estimate_stream_seconds` closed form, the typed `RoutingError` context,
+mid-transfer re-balancing beating the static stripe with zero duplicate
+delivered bytes (and without bumping the topology epoch), and the NACK
+retransmit riding the current least-loaded live path of its route set.
+"""
+import numpy as np
+import pytest
+
+from repro.ckpt.stream import (ChunkedStream, StreamAssembler,
+                               TopologyTransport)
+from repro.core.lccl import LinkTopology, PodFabric, RoutingError
+from repro.runtime.failover import schedule_state_phase
+from repro.runtime.recovery import StreamRecovery, estimate_stream_seconds
+
+
+def _stream(nbytes, quantum=1 << 16, sid="t/kpath"):
+    arr = np.zeros(int(nbytes) // 4, np.float32)
+    return ChunkedStream.from_pytree(sid, {"shard": arr}, quantum=quantum)
+
+
+def _send(tp, nbytes, src, dst, t=0.0, quantum=1 << 16, k=None,
+          sid="t/kpath"):
+    s = _stream(nbytes, quantum, sid)
+    asm = StreamAssembler.for_stream(s)
+    tk = tp.send(s, t, assembler=asm, src=src, dst=dst, policy="split", k=k)
+    return tk, asm
+
+
+# --------------------------------------------------------------------------- #
+# fabric surface
+# --------------------------------------------------------------------------- #
+def test_dcn_uplinks_default_is_bit_identical_to_legacy_fabric():
+    a = PodFabric(3, 4, 50e9, 5e9)
+    b = PodFabric(3, 4, 50e9, 5e9, dcn_uplinks=1)
+    assert set(a.links) == set(b.links)
+    dcn = sorted(e for e in a.links if a.tier(*e) == "dcn")
+    assert dcn == [(0, 4), (0, 8), (4, 8)]
+
+
+def test_uplink_positions_and_per_uplink_rings():
+    fab = PodFabric(4, 4, 50e9, 5e9, dcn_uplinks=2)
+    assert [fab.uplink(p, 0) for p in range(4)] == [0, 4, 8, 12]
+    assert [fab.uplink(p, 1) for p in range(4)] == [2, 6, 10, 14]
+    assert fab.uplink(1) == fab.gateway(1) == 4   # uplink 0 is the gateway
+    dcn = {e for e in fab.links if fab.tier(*e) == "dcn"}
+    assert dcn == {(0, 4), (4, 8), (8, 12), (0, 12),
+                   (2, 6), (6, 10), (10, 14), (2, 14)}
+
+
+def test_four_edge_disjoint_cross_pod_paths():
+    fab = PodFabric(4, 4, 50e9, 5e9, dcn_uplinks=2)
+    paths = fab.disjoint_paths(fab.gateway(0), fab.gateway(2), k=4)
+    assert len(paths) == 4
+    used = [e for p in paths for e in p]
+    assert len(used) == len(set(used)), "paths share an edge"
+
+
+# --------------------------------------------------------------------------- #
+# k=4 vs k=2 on an idle 4-pod fabric, validated against the closed form
+# --------------------------------------------------------------------------- #
+def test_k4_beats_k2_and_matches_closed_form():
+    nbytes = 64 << 20            # large enough to amortize pipeline fill
+    finishes = {}
+    for k in (2, 4):
+        fab = PodFabric(4, 4, 50e9, 5e9, quantum=1 << 16, dcn_uplinks=2)
+        tp = TopologyTransport(fab, route_k=k)
+        tk, asm = _send(tp, nbytes, 0, 8, quantum=1 << 16)
+        tp.drain()
+        assert asm.complete
+        finishes[k] = tk.finish_time
+        est = estimate_stream_seconds(fab, 0, 8, nbytes, k=k)
+        assert finishes[k] == pytest.approx(est, rel=0.05)
+    assert finishes[4] < finishes[2]
+    # the DCN bottleneck doubles: 4 disjoint 5 GB/s routes vs 2
+    assert finishes[2] / finishes[4] == pytest.approx(2.0, rel=0.05)
+
+
+def test_ring_k2_default_matches_explicit_bidirectional_split():
+    """route_k=2 on a plain ring reproduces the historical bidirectional
+    split: the transport's default routing lands at the same instant as
+    an explicit 2-path `schedule_state_phase` over `disjoint_paths`."""
+    nbytes = 4 << 20
+    topo = LinkTopology(4, 50e9, quantum=1 << 16)
+    tp = TopologyTransport(topo)          # default route_k=2
+    tk, asm = _send(tp, nbytes, 0, 1, quantum=1 << 16)
+    tp.drain()
+    assert asm.complete
+    ref = LinkTopology(4, 50e9, quantum=1 << 16)
+    t_ref = schedule_state_phase(nbytes, 50e9, quantum=1 << 16,
+                                 topology=ref,
+                                 paths=ref.disjoint_paths(0, 1))
+    assert tk.finish_time == pytest.approx(t_ref, rel=1e-9)
+
+
+# --------------------------------------------------------------------------- #
+# typed RoutingError (satellite 1)
+# --------------------------------------------------------------------------- #
+def test_routing_error_carries_src_dst_and_dark_sets():
+    topo = LinkTopology(4, 50e9)
+    topo.fail_node(0)
+    topo.fail_node(2)                     # 1 and 3 are now disconnected
+    with pytest.raises(RoutingError) as ei:
+        topo.path(1, 3)
+    err = ei.value
+    assert isinstance(err, RuntimeError)  # back-compat for bare excepts
+    assert err.src == 1 and err.dst == 3
+    assert set(err.dark_nodes) == {0, 2}
+
+
+def test_split_bytes_empty_paths_raises_routing_error():
+    topo = LinkTopology(4, 50e9)
+    with pytest.raises(RoutingError):
+        topo.split_bytes([], 1e6)
+
+
+def test_transport_routes_raises_routing_error_with_context():
+    topo = LinkTopology(4, 50e9)
+    topo.fail_node(0)
+    topo.fail_node(2)
+    tp = TopologyTransport(topo)
+    with pytest.raises(RoutingError) as ei:
+        tp.routes(1, 3, 1e6)
+    assert ei.value.src == 1 and ei.value.dst == 3
+
+
+def test_routing_error_is_public_api():
+    import repro
+    assert repro.RoutingError is RoutingError
+
+
+# --------------------------------------------------------------------------- #
+# mid-transfer re-balancing
+# --------------------------------------------------------------------------- #
+def _degraded_run(auto_rebalance):
+    fab = PodFabric(4, 4, 50e9, 5e9, quantum=1 << 16, dcn_uplinks=2)
+    tp = TopologyTransport(fab, route_k=4, auto_rebalance=auto_rebalance)
+    tk, asm = _send(tp, 4 << 20, 0, 8, quantum=1 << 16)
+    tp.run(until=0.0001)                 # mid-flight: ~half the bytes moved
+    fab.set_bandwidth(0, 4, 1e7)         # one DCN route browns out to 0.2%
+    epoch_after_degrade = fab.epoch
+    tp.drain()
+    assert asm.complete
+    return tk, tp, fab, epoch_after_degrade
+
+
+def test_rebalance_beats_static_with_zero_duplicate_bytes():
+    tk_reb, tp_reb, _, _ = _degraded_run(auto_rebalance=True)
+    tk_sta, tp_sta, _, _ = _degraded_run(auto_rebalance=False)
+    assert tk_reb.finish_time < tk_sta.finish_time
+    assert tp_reb.rebalances >= 1 and tp_reb.chunks_rebalanced >= 1
+    assert tp_sta.rebalances == 0 and tp_sta.chunks_rebalanced == 0
+    # byte conservation: both deliver exactly the stream, nothing twice
+    assert tp_reb.accounting()["state_bytes"] == \
+        tp_sta.accounting()["state_bytes"] == float(4 << 20)
+
+
+def test_rebalance_does_not_bump_topology_epoch():
+    """Compiled `TrafficPlan`s are invalidated by the topology epoch; a
+    re-balance re-routes only its own pending chunks, so it must NOT look
+    like a topology mutation."""
+    _, tp, fab, epoch_after_degrade = _degraded_run(auto_rebalance=True)
+    assert tp.rebalances >= 1
+    assert fab.epoch == epoch_after_degrade
+
+
+def test_auto_rebalance_idle_fabric_is_a_noop():
+    """`drain()` checks the topology epoch before pumping; with no fabric
+    mutation the stripes are left exactly as first laid out."""
+    fab = PodFabric(4, 4, 50e9, 5e9, quantum=1 << 16, dcn_uplinks=2)
+    tp = TopologyTransport(fab, route_k=4)
+    _, asm = _send(tp, 4 << 20, 0, 8, quantum=1 << 16)
+    tp.drain()
+    assert asm.complete
+    assert tp.rebalances == 0 and tp.chunks_rebalanced == 0
+
+
+def test_forced_rebalance_on_healthy_fabric_conserves_bytes():
+    """An explicit `rebalance()` is a forced re-stripe — even with nothing
+    degraded it re-runs the split, and the stream still lands exactly."""
+    fab = PodFabric(4, 4, 50e9, 5e9, quantum=1 << 16, dcn_uplinks=2)
+    tp = TopologyTransport(fab, route_k=4)
+    _, asm = _send(tp, 4 << 20, 0, 8, quantum=1 << 16)
+    assert tp.rebalance() > 0
+    tp.drain()
+    assert asm.complete
+    assert tp.accounting()["state_bytes"] == float(4 << 20)
+
+
+# --------------------------------------------------------------------------- #
+# NACK retransmits re-route (satellite 6)
+# --------------------------------------------------------------------------- #
+def test_nack_resend_rides_current_least_loaded_live_path():
+    from repro.core.lccl import submit_chunked_path
+    topo = LinkTopology(4, 50e9, quantum=1 << 14)
+    tp = TopologyTransport(topo, route_k=2, auto_rebalance=False)
+    _send(tp, 1 << 18, 0, 1, quantum=1 << 14)
+    st = tp._stripes[0]
+    direct, detour = sorted(st.paths, key=len)
+    assert direct == [(0, 1)] and len(detour) == 3
+    # bury the direct edge under a fresh STATE backlog: a retransmit
+    # issued NOW must pick the 3-hop detour, not the original short path
+    submit_chunked_path(topo, "STATE", 1e9, 0.0, direct, 1 << 20)
+    assert tp._retransmit_path(st, tuple(direct)) == detour
+
+
+def test_nack_resend_falls_back_to_fresh_disjoint_query():
+    """When every striped path has a dead edge but the destination is
+    still reachable, the resend re-routes via a fresh disjoint-paths
+    query instead of pinning to the original (now dark) path."""
+    fab = PodFabric(4, 4, 50e9, 5e9, quantum=1 << 16, dcn_uplinks=2)
+    tp = TopologyTransport(fab, route_k=2, auto_rebalance=False)
+    _send(tp, 1 << 20, 0, 8, quantum=1 << 16)
+    st = tp._stripes[0]
+    dead = set()
+    for p in st.paths:                   # kill one DCN hop on each stripe
+        u, v = next(e for e in p if fab.tier(*e) == "dcn")
+        fab.fail_edge(u, v)
+        dead.add((u, v))
+    original = tuple(st.paths[0])
+    rerouted = tp._retransmit_path(st, original)
+    assert rerouted and not (set(rerouted) & dead)
+    assert all(fab.edge_up(*e) for e in rerouted)
+
+
+def test_corrupted_striped_stream_heals_end_to_end():
+    fab = PodFabric(4, 4, 50e9, 5e9, quantum=1 << 16, dcn_uplinks=2)
+    tp = TopologyTransport(fab, route_k=4)
+    s = _stream(4 << 20, 1 << 16, "t/kpath_nack")
+    asm = StreamAssembler.for_stream(s)
+    tp.corrupt_once(s.stream_id, 0)
+    tp.corrupt_once(s.stream_id, 7)
+    tp.send(s, 0.0, assembler=asm, src=0, dst=8, policy="split")
+    tp.drain()
+    assert asm.complete and tp.nacks_sent == 2
+
+
+# --------------------------------------------------------------------------- #
+# policy threading
+# --------------------------------------------------------------------------- #
+def test_stream_recovery_route_k_overrides_transport_default():
+    class _T:                 # minimal cluster stand-in
+        route_k = 2
+    class _C:
+        transport = _T()
+    assert StreamRecovery()._effective_k(_C()) == 2
+    assert StreamRecovery(route_k=4)._effective_k(_C()) == 4
+
+
+def test_estimate_stream_seconds_scales_with_k():
+    fab = PodFabric(4, 4, 50e9, 5e9, dcn_uplinks=2)
+    e2 = estimate_stream_seconds(fab, 0, 8, 64 << 20, k=2)
+    e4 = estimate_stream_seconds(fab, 0, 8, 64 << 20, k=4)
+    assert e4 == pytest.approx(e2 / 2, rel=1e-6)

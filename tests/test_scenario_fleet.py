@@ -29,118 +29,326 @@ from repro.runtime.scenarios import corpus, random_scenario, run_scenario
 
 # dp=8 scenarios build twice the workers; keep the every-PR subset snappy
 _SLOW = {"multi_wave_storm", "gateway_oversubscription",
-         "gateway_oversubscription_no_detour"}
+         "gateway_oversubscription_no_detour",
+         "cross_pod_k3_stripe", "cross_pod_k3_rebalance"}
 
 # ---- the pinned fleet verdicts (regenerate by running the scenario and
 # reading Verdict.pinned(); every field is deterministic in sim time) ----
 VERDICTS = {
     "clean_software_failure": {
-        "steps_completed": 10, "final_iteration": 10, "recoveries": 1,
-        "rollbacks": 0, "rolled_back_iterations": 0, "interrupted": 0,
-        "detection_latency_s": 0.36, "detections": 1,
-        "exposed_seconds": 0.0, "mitigations": 0, "gray_quarantined": 0,
-        "gray_tolerated": 0, "final_full_every": None,
-        "state_bytes_streamed": 271488.0, "chunks_reused": 0,
+        "steps_completed": 10,
+        "final_iteration": 10,
+        "recoveries": 1,
+        "rollbacks": 0,
+        "rolled_back_iterations": 0,
+        "interrupted": 0,
+        "detection_latency_s": 0.36,
+        "detections": 1,
+        "exposed_seconds": 0.0,
+        "mitigations": 0,
+        "gray_quarantined": 0,
+        "gray_tolerated": 0,
+        "final_full_every": None,
+        "state_bytes_streamed": 271488.0,
+        "chunks_reused": 0,
         "recovery_total_s": 1.364,
+        "stream_seconds": 5.43e-06,
+        "rebalances": 0,
+        "chunks_rebalanced": 0,
     },
     "recovery_race_concurrent": {
-        "steps_completed": 10, "final_iteration": 10, "recoveries": 1,
-        "rollbacks": 0, "rolled_back_iterations": 0, "interrupted": 0,
-        "detection_latency_s": 0.36, "detections": 1,
-        "exposed_seconds": 0.0, "mitigations": 0, "gray_quarantined": 0,
-        "gray_tolerated": 0, "final_full_every": None,
-        "state_bytes_streamed": 542976.0, "chunks_reused": 0,
+        "steps_completed": 10,
+        "final_iteration": 10,
+        "recoveries": 1,
+        "rollbacks": 0,
+        "rolled_back_iterations": 0,
+        "interrupted": 0,
+        "detection_latency_s": 0.36,
+        "detections": 1,
+        "exposed_seconds": 0.0,
+        "mitigations": 0,
+        "gray_quarantined": 0,
+        "gray_tolerated": 0,
+        "final_full_every": None,
+        "state_bytes_streamed": 542976.0,
+        "chunks_reused": 0,
         "recovery_total_s": 1.364,
+        "stream_seconds": 5.43e-06,
+        "rebalances": 0,
+        "chunks_rebalanced": 0,
     },
     "multi_wave_storm": {
-        "steps_completed": 12, "final_iteration": 12, "recoveries": 2,
-        "rollbacks": 0, "rolled_back_iterations": 0, "interrupted": 0,
-        "detection_latency_s": 0.259970136, "detections": 2,
-        "exposed_seconds": 0.0, "mitigations": 0, "gray_quarantined": 0,
-        "gray_tolerated": 0, "final_full_every": 6,
-        "state_bytes_streamed": 1085952.0, "chunks_reused": 0,
+        "steps_completed": 12,
+        "final_iteration": 12,
+        "recoveries": 2,
+        "rollbacks": 0,
+        "rolled_back_iterations": 0,
+        "interrupted": 0,
+        "detection_latency_s": 0.259970136,
+        "detections": 2,
+        "exposed_seconds": 0.0,
+        "mitigations": 0,
+        "gray_quarantined": 0,
+        "gray_tolerated": 0,
+        "final_full_every": 6,
+        "state_bytes_streamed": 1085952.0,
+        "chunks_reused": 0,
         "recovery_total_s": 2.685970136,
+        "stream_seconds": 5.9727e-05,
+        "rebalances": 0,
+        "chunks_rebalanced": 0,
     },
     "lazy_backup_pressure": {
-        "steps_completed": 10, "final_iteration": 10, "recoveries": 1,
-        "rollbacks": 0, "rolled_back_iterations": 0, "interrupted": 0,
-        "detection_latency_s": 0.31, "detections": 1,
-        "exposed_seconds": 0.0, "mitigations": 0, "gray_quarantined": 0,
-        "gray_tolerated": 0, "final_full_every": None,
-        "state_bytes_streamed": 271488.0, "chunks_reused": 0,
+        "steps_completed": 10,
+        "final_iteration": 10,
+        "recoveries": 1,
+        "rollbacks": 0,
+        "rolled_back_iterations": 0,
+        "interrupted": 0,
+        "detection_latency_s": 0.31,
+        "detections": 1,
+        "exposed_seconds": 0.0,
+        "mitigations": 0,
+        "gray_quarantined": 0,
+        "gray_tolerated": 0,
+        "final_full_every": None,
+        "state_bytes_streamed": 271488.0,
+        "chunks_reused": 0,
         "recovery_total_s": 1.314,
+        "stream_seconds": 0.00135744,
+        "rebalances": 0,
+        "chunks_rebalanced": 0,
     },
     "gateway_oversubscription": {
-        "steps_completed": 12, "final_iteration": 12, "recoveries": 0,
-        "rollbacks": 0, "rolled_back_iterations": 0, "interrupted": 0,
-        "detection_latency_s": None, "detections": 0,
-        "exposed_seconds": 0.0, "mitigations": 0, "gray_quarantined": 1,
-        "gray_tolerated": 0, "final_full_every": None,
-        "state_bytes_streamed": 0.0, "chunks_reused": 0,
+        "steps_completed": 12,
+        "final_iteration": 12,
+        "recoveries": 0,
+        "rollbacks": 0,
+        "rolled_back_iterations": 0,
+        "interrupted": 0,
+        "detection_latency_s": None,
+        "detections": 0,
+        "exposed_seconds": 0.0,
+        "mitigations": 0,
+        "gray_quarantined": 1,
+        "gray_tolerated": 0,
+        "final_full_every": None,
+        "state_bytes_streamed": 0.0,
+        "chunks_reused": 0,
         "recovery_total_s": 0.0,
+        "stream_seconds": 0.0,
+        "rebalances": 0,
+        "chunks_rebalanced": 0,
     },
     "gateway_oversubscription_no_detour": {
-        "steps_completed": 10, "final_iteration": 10, "recoveries": 0,
-        "rollbacks": 0, "rolled_back_iterations": 0, "interrupted": 0,
-        "detection_latency_s": None, "detections": 0,
-        "exposed_seconds": 0.0, "mitigations": 0, "gray_quarantined": 0,
-        "gray_tolerated": 1, "final_full_every": None,
-        "state_bytes_streamed": 0.0, "chunks_reused": 0,
+        "steps_completed": 10,
+        "final_iteration": 10,
+        "recoveries": 0,
+        "rollbacks": 0,
+        "rolled_back_iterations": 0,
+        "interrupted": 0,
+        "detection_latency_s": None,
+        "detections": 0,
+        "exposed_seconds": 0.0,
+        "mitigations": 0,
+        "gray_quarantined": 0,
+        "gray_tolerated": 1,
+        "final_full_every": None,
+        "state_bytes_streamed": 0.0,
+        "chunks_reused": 0,
         "recovery_total_s": 0.0,
+        "stream_seconds": 0.0,
+        "rebalances": 0,
+        "chunks_rebalanced": 0,
     },
     "mid_transfer_degradation": {
-        "steps_completed": 10, "final_iteration": 10, "recoveries": 1,
-        "rollbacks": 0, "rolled_back_iterations": 0, "interrupted": 1,
-        "detection_latency_s": 0.36, "detections": 1,
-        "exposed_seconds": 0.0, "mitigations": 0, "gray_quarantined": 1,
-        "gray_tolerated": 0, "final_full_every": None,
-        "state_bytes_streamed": 140416.0, "chunks_reused": 2,
+        "steps_completed": 10,
+        "final_iteration": 10,
+        "recoveries": 1,
+        "rollbacks": 0,
+        "rolled_back_iterations": 0,
+        "interrupted": 1,
+        "detection_latency_s": 0.36,
+        "detections": 1,
+        "exposed_seconds": 0.05,
+        "mitigations": 0,
+        "gray_quarantined": 1,
+        "gray_tolerated": 0,
+        "final_full_every": None,
+        "state_bytes_streamed": 238720.0,
+        "chunks_reused": 2,
         "recovery_total_s": 1.364,
+        "stream_seconds": 0.0011936,
+        "rebalances": 1,
+        "chunks_rebalanced": 7,
+    },
+    "mid_transfer_degradation_static": {
+        "steps_completed": 10,
+        "final_iteration": 10,
+        "recoveries": 1,
+        "rollbacks": 0,
+        "rolled_back_iterations": 0,
+        "interrupted": 1,
+        "detection_latency_s": 0.36,
+        "detections": 1,
+        "exposed_seconds": 0.05,
+        "mitigations": 0,
+        "gray_quarantined": 1,
+        "gray_tolerated": 0,
+        "final_full_every": None,
+        "state_bytes_streamed": 238720.0,
+        "chunks_reused": 2,
+        "recovery_total_s": 1.364,
+        "stream_seconds": 0.00540672,
+        "rebalances": 0,
+        "chunks_rebalanced": 0,
+    },
+    "cross_pod_k3_stripe": {
+        "steps_completed": 10,
+        "final_iteration": 10,
+        "recoveries": 1,
+        "rollbacks": 0,
+        "rolled_back_iterations": 0,
+        "interrupted": 0,
+        "detection_latency_s": 0.36,
+        "detections": 1,
+        "exposed_seconds": 0.0,
+        "mitigations": 0,
+        "gray_quarantined": 0,
+        "gray_tolerated": 0,
+        "final_full_every": None,
+        "state_bytes_streamed": 135744.0,
+        "chunks_reused": 0,
+        "recovery_total_s": 1.368,
+        "stream_seconds": 0.000491848,
+        "rebalances": 0,
+        "chunks_rebalanced": 0,
+    },
+    "cross_pod_k3_rebalance": {
+        "steps_completed": 10,
+        "final_iteration": 10,
+        "recoveries": 1,
+        "rollbacks": 0,
+        "rolled_back_iterations": 0,
+        "interrupted": 0,
+        "detection_latency_s": 0.36,
+        "detections": 1,
+        "exposed_seconds": 0.0,
+        "mitigations": 0,
+        "gray_quarantined": 1,
+        "gray_tolerated": 0,
+        "final_full_every": None,
+        "state_bytes_streamed": 135744.0,
+        "chunks_reused": 0,
+        "recovery_total_s": 1.368,
+        "stream_seconds": 0.000655688,
+        "rebalances": 1,
+        "chunks_rebalanced": 2,
     },
     "persistent_straggler": {
-        "steps_completed": 12, "final_iteration": 12, "recoveries": 0,
-        "rollbacks": 0, "rolled_back_iterations": 0, "interrupted": 0,
-        "detection_latency_s": None, "detections": 0,
-        "exposed_seconds": 0.0, "mitigations": 1, "gray_quarantined": 0,
-        "gray_tolerated": 0, "final_full_every": None,
-        "state_bytes_streamed": 0.0, "chunks_reused": 0,
+        "steps_completed": 12,
+        "final_iteration": 12,
+        "recoveries": 0,
+        "rollbacks": 0,
+        "rolled_back_iterations": 0,
+        "interrupted": 0,
+        "detection_latency_s": None,
+        "detections": 0,
+        "exposed_seconds": 0.0,
+        "mitigations": 1,
+        "gray_quarantined": 0,
+        "gray_tolerated": 0,
+        "final_full_every": None,
+        "state_bytes_streamed": 0.0,
+        "chunks_reused": 0,
         "recovery_total_s": 0.0,
+        "stream_seconds": 0.0,
+        "rebalances": 0,
+        "chunks_rebalanced": 0,
     },
     "gray_link_degradation": {
-        "steps_completed": 10, "final_iteration": 10, "recoveries": 0,
-        "rollbacks": 0, "rolled_back_iterations": 0, "interrupted": 0,
-        "detection_latency_s": None, "detections": 0,
-        "exposed_seconds": 0.0, "mitigations": 0, "gray_quarantined": 1,
-        "gray_tolerated": 0, "final_full_every": None,
-        "state_bytes_streamed": 0.0, "chunks_reused": 0,
+        "steps_completed": 10,
+        "final_iteration": 10,
+        "recoveries": 0,
+        "rollbacks": 0,
+        "rolled_back_iterations": 0,
+        "interrupted": 0,
+        "detection_latency_s": None,
+        "detections": 0,
+        "exposed_seconds": 0.0,
+        "mitigations": 0,
+        "gray_quarantined": 1,
+        "gray_tolerated": 0,
+        "final_full_every": None,
+        "state_bytes_streamed": 0.0,
+        "chunks_reused": 0,
         "recovery_total_s": 0.0,
+        "stream_seconds": 0.0,
+        "rebalances": 0,
+        "chunks_rebalanced": 0,
     },
     "adaptive_cadence": {
-        "steps_completed": 14, "final_iteration": 14, "recoveries": 2,
-        "rollbacks": 0, "rolled_back_iterations": 0, "interrupted": 0,
-        "detection_latency_s": 0.35999457, "detections": 2,
-        "exposed_seconds": 0.0, "mitigations": 0, "gray_quarantined": 0,
-        "gray_tolerated": 0, "final_full_every": 7,
-        "state_bytes_streamed": 542976.0, "chunks_reused": 0,
+        "steps_completed": 14,
+        "final_iteration": 14,
+        "recoveries": 2,
+        "rollbacks": 0,
+        "rolled_back_iterations": 0,
+        "interrupted": 0,
+        "detection_latency_s": 0.35999457,
+        "detections": 2,
+        "exposed_seconds": 0.0,
+        "mitigations": 0,
+        "gray_quarantined": 0,
+        "gray_tolerated": 0,
+        "final_full_every": 7,
+        "state_bytes_streamed": 542976.0,
+        "chunks_reused": 0,
         "recovery_total_s": 2.77799457,
+        "stream_seconds": 1.086e-05,
+        "rebalances": 0,
+        "chunks_rebalanced": 0,
     },
     "hardware_double_stream_rollback": {
-        "steps_completed": 10, "final_iteration": 7, "recoveries": 1,
-        "rollbacks": 1, "rolled_back_iterations": 3, "interrupted": 0,
-        "detection_latency_s": 0.26, "detections": 1,
-        "exposed_seconds": 0.0, "mitigations": 0, "gray_quarantined": 0,
-        "gray_tolerated": 0, "final_full_every": None,
-        "state_bytes_streamed": 0.0, "chunks_reused": 0,
+        "steps_completed": 10,
+        "final_iteration": 7,
+        "recoveries": 1,
+        "rollbacks": 1,
+        "rolled_back_iterations": 3,
+        "interrupted": 0,
+        "detection_latency_s": 0.26,
+        "detections": 1,
+        "exposed_seconds": 0.0,
+        "mitigations": 0,
+        "gray_quarantined": 0,
+        "gray_tolerated": 0,
+        "final_full_every": None,
+        "state_bytes_streamed": 0.0,
+        "chunks_reused": 0,
         "recovery_total_s": 8.26144794,
+        "stream_seconds": 0.0,
+        "rebalances": 0,
+        "chunks_rebalanced": 0,
     },
     "hardware_double_compute_free": {
-        "steps_completed": 10, "final_iteration": 10, "recoveries": 1,
-        "rollbacks": 0, "rolled_back_iterations": 0, "interrupted": 0,
-        "detection_latency_s": 0.26, "detections": 1,
-        "exposed_seconds": 0.0, "mitigations": 0, "gray_quarantined": 0,
-        "gray_tolerated": 0, "final_full_every": None,
-        "state_bytes_streamed": 0.0, "chunks_reused": 0,
+        "steps_completed": 10,
+        "final_iteration": 10,
+        "recoveries": 1,
+        "rollbacks": 0,
+        "rolled_back_iterations": 0,
+        "interrupted": 0,
+        "detection_latency_s": 0.26,
+        "detections": 1,
+        "exposed_seconds": 0.0,
+        "mitigations": 0,
+        "gray_quarantined": 0,
+        "gray_tolerated": 0,
+        "final_full_every": None,
+        "state_bytes_streamed": 0.0,
+        "chunks_reused": 0,
         "recovery_total_s": 7.76016968,
+        "stream_seconds": 0.0,
+        "rebalances": 0,
+        "chunks_rebalanced": 0,
     },
 }
 
@@ -160,6 +368,27 @@ def _assert_verdict(got: dict, want: dict, name: str) -> None:
 
 def test_corpus_and_pins_cover_each_other():
     assert set(_CORPUS) == set(VERDICTS)
+
+
+def test_rebalanced_stream_beats_static_baseline():
+    """The k-path acceptance pin, read across two pinned verdicts: the
+    re-balanced mid-transfer-degradation stream finishes strictly faster
+    than its static-2-path twin, moves actual chunks between paths, and
+    delivers exactly the same bytes (zero duplicate sends). The pins
+    themselves are enforced against live runs in
+    test_scenario_verdict_pinned, so these are assertions about measured
+    behavior, not about constants."""
+    reb = VERDICTS["mid_transfer_degradation"]
+    sta = VERDICTS["mid_transfer_degradation_static"]
+    assert reb["stream_seconds"] < sta["stream_seconds"]
+    assert reb["rebalances"] >= 1 and reb["chunks_rebalanced"] >= 1
+    assert sta["rebalances"] == 0 and sta["chunks_rebalanced"] == 0
+    assert reb["state_bytes_streamed"] == sta["state_bytes_streamed"]
+    # the k=3 cross-pod stripe re-balances too, without duplicate bytes
+    k3r, k3s = VERDICTS["cross_pod_k3_rebalance"], \
+        VERDICTS["cross_pod_k3_stripe"]
+    assert k3r["rebalances"] >= 1
+    assert k3r["state_bytes_streamed"] == k3s["state_bytes_streamed"]
 
 
 def _params():

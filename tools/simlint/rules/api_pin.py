@@ -28,6 +28,7 @@ PUBLIC_API = (
     "RecoveryPlan",
     "RecoveryReport",
     "RecoveryError",
+    "RoutingError",
     "StreamRecovery",
     "ComputeRecovery",
     "HybridRecovery",
